@@ -1,0 +1,81 @@
+"""Paper Figs. 10/11: CP-APR model-update (Φ) performance.
+
+Compares the SparTen-style COO baseline (scatter-add Φ with precomputed Π,
+no linearization) against ALTO Φ with the adaptive traversal, for both
+ALTO-PRE and ALTO-OTF memory policies. Derived = speedup vs the COO
+baseline (the paper's Fig. 10 y-axis) and the per-policy ratio (Fig. 11's
+OTF-vs-PRE diamonds).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import alto, heuristics, mttkrp
+from repro.core.cpapr import _phi
+from repro.core.mttkrp import (krp_rows, row_reduce_oriented,
+                               row_reduce_recursive)
+from repro.sparse import synthetic
+
+TENSORS = ["uber_like", "chicago_like", "darpa_like", "enron_like"]
+RANK = 16
+EPS = 1e-10
+
+
+def _setup(name):
+    x = synthetic.paper_like(name)
+    at = alto.build(x, n_partitions=32)
+    rng = np.random.default_rng(0)
+    factors = [jnp.asarray(np.abs(rng.standard_normal((I, RANK))
+                                  ).astype(np.float32) + 0.05)
+               for I in x.dims]
+    return x, at, factors
+
+
+def run(quick: bool = False):
+    names = TENSORS[:2] if quick else TENSORS
+    for name in names:
+        x, at, factors = _setup(name)
+        mode = 0
+        B = jnp.abs(factors[mode]) + 0.1
+        coords_coo = jnp.asarray(x.coords)
+        values_coo = jnp.asarray(x.values)
+
+        # SparTen-style baseline: COO + stored Π + atomic-style scatter-add
+        def phi_coo(coords, values, B, pi):
+            rows = coords[:, mode]
+            contrib = _phi(rows, values, pi, B, EPS)
+            out = jnp.zeros((B.shape[0], RANK), contrib.dtype)
+            return out.at[rows].add(contrib)
+
+        pi_coo = krp_rows(coords_coo, factors, mode)
+
+        def phi_alto(at, B, factors):
+            coords = alto.delinearize(at.meta.enc, at.words)
+            krp = krp_rows(coords, factors, mode)   # OTF
+            contrib = _phi(coords[:, mode], at.values, krp, B, EPS)
+            return row_reduce_recursive(at, mode, contrib)
+
+        def phi_alto_pre(at, B, pi):
+            coords = alto.delinearize(at.meta.enc, at.words)
+            contrib = _phi(coords[:, mode], at.values, pi, B, EPS)
+            return row_reduce_recursive(at, mode, contrib)
+
+        pi_alto = krp_rows(at.coords(), factors, mode)
+
+        t_coo = time_call(jax.jit(phi_coo), coords_coo, values_coo, B,
+                          pi_coo)
+        t_otf = time_call(jax.jit(phi_alto), at, B, factors)
+        t_pre = time_call(jax.jit(phi_alto_pre), at, B, pi_alto)
+        pol = heuristics.choose_pi_policy(at.meta, RANK).value
+        emit(f"cpapr_phi/{name}/sparten_coo", t_coo, "speedup=1.00")
+        emit(f"cpapr_phi/{name}/alto_otf", t_otf,
+             f"speedup={t_coo / t_otf:.2f}")
+        emit(f"cpapr_phi/{name}/alto_pre", t_pre,
+             f"speedup={t_coo / t_pre:.2f};chosen={pol}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Paper Fig. 13: format construction cost — REAL builds of each format.
+
+ALTO generation = bit-gather linearize + single-packed-key argsort +
+balanced partitioning. HiCOO = block-key split + lexsort + block boundary
+scan. CSF-ALL = N mode orderings, each an N-key lexsort + per-level
+prefix dedup (the SPLATT-ALL construction the paper benchmarks).
+Derived = ALTO speedup over each baseline.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import alto
+from repro.sparse import baselines, synthetic
+
+
+def _time(fn, iters=3):
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run(quick: bool = False):
+    names = list(synthetic.PAPER_LIKE)[:3 if quick else None]
+    for name in names:
+        x = synthetic.paper_like(name)
+
+        t_alto = _time(lambda: alto.build(x, n_partitions=8,
+                                          compute_reuse=False))
+        t_hicoo = _time(lambda: baselines.build_hicoo(x, block_bits=7))
+        t_csf = _time(lambda: baselines.CsfAll(x))
+        emit(f"format_gen/{name}/alto", t_alto, "speedup=1.00")
+        emit(f"format_gen/{name}/hicoo", t_hicoo,
+             f"alto_speedup={t_hicoo / t_alto:.2f}")
+        emit(f"format_gen/{name}/csf_all", t_csf,
+             f"alto_speedup={t_csf / t_alto:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU — relative
+numbers only; the TPU roofline story lives in EXPERIMENTS.md §Roofline).
+Derived = rel. error vs the pure-jnp oracle, proving the timed artifact is
+the validated one."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import alto, mttkrp as cm
+from repro.kernels import ops, ref
+from repro.sparse import synthetic
+
+
+def run(quick: bool = False):
+    x = synthetic.zipf_tensor((256, 256, 128), 20_000 if quick else 60_000,
+                              seed=1, count_data=True)
+    at = alto.build(x, n_partitions=8)
+    rng = np.random.default_rng(0)
+    factors = [jnp.asarray(np.abs(rng.standard_normal((I, 16))
+                                  ).astype(np.float32) + 0.05)
+               for I in x.dims]
+
+    t = time_call(lambda: ops.delinearize(at.meta.enc, at.words))
+    got = ops.delinearize(at.meta.enc, at.words)
+    want = ref.ref_delinearize(at.meta.enc, at.words)
+    emit("kernel/delinearize", t,
+         f"exact={bool(jnp.array_equal(got, want))}")
+
+    t = time_call(lambda: ops.mttkrp(at, factors, 0))
+    got = ops.mttkrp(at, factors, 0)
+    want = cm.mttkrp_recursive(at, factors, 0)
+    rel = float(jnp.max(jnp.abs(got - want))) / (
+        float(jnp.max(jnp.abs(want))) + 1e-9)
+    emit("kernel/mttkrp", t, f"rel_err={rel:.1e}")
+
+    B = jnp.abs(factors[0]) + 0.1
+    t = time_call(lambda: ops.cpapr_phi(at, B, 0, factors=factors))
+    emit("kernel/cpapr_phi_otf", t, "")
+
+
+if __name__ == "__main__":
+    run()

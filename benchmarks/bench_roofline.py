@@ -1,0 +1,45 @@
+"""Roofline summary from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+emits one row per (arch × shape × mesh): name, dominant-term seconds (as
+us_per_call), derived = bottleneck + per-term seconds + useful ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run(quick: bool = False):
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        emit("roofline/none", 0.0,
+             "run `python -m repro.launch.dryrun --all` first")
+        return
+    for f in files:
+        rec = json.load(open(f))
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec.get("status") != "ok":
+            emit(name, 0.0, f"status={rec.get('status')}")
+            continue
+        rl = rec.get("roofline")
+        if not rl:
+            emit(name, 0.0, "no-calibration")
+            continue
+        dom = max(rl["t_compute"], rl["t_memory"], rl["t_collective"])
+        emit(name, dom * 1e6,
+             f"bottleneck={rl['bottleneck']};"
+             f"t_c={rl['t_compute']:.3f}s;t_m={rl['t_memory']:.3f}s;"
+             f"t_x={rl['t_collective']:.3f}s;"
+             f"useful={rl['useful_ratio']:.2f};"
+             f"peak_dev_GiB={rec['memory']['peak_est_bytes'] / 2**30:.2f}")
+
+
+if __name__ == "__main__":
+    run()

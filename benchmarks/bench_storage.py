@@ -1,0 +1,49 @@
+"""Paper Fig. 12 / Eqs. 1-3: tensor storage across formats, relative to COO.
+
+Exact byte counts from the REAL format builds: COO, ALTO (runtime
+multi-u32 index), HiCOO (block+offset arrays), CSF-ALL (N fiber trees,
+the paper's 'SPLATT-ALL'), the analytic Z-Morton SFC size (Eq. 3), and
+the adaptive extra cost of oriented views (only for limited-reuse modes).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import alto, heuristics, encoding as E
+from repro.sparse import baselines, synthetic
+
+
+def run(quick: bool = False):
+    names = list(synthetic.PAPER_LIKE)[:3 if quick else None]
+    for name in names:
+        x = synthetic.paper_like(name)
+        enc = E.make_encoding(x.dims)
+        vb = x.values.dtype.itemsize
+        coo = x.nnz * (enc.storage_bits_coo(32) // 8 + vb)
+        at = alto.build(x, n_partitions=8)
+        alto_b = at.storage_bytes()
+        # adaptive oriented views (permutation + row ids) only where needed
+        extra = 0
+        for m in range(x.ndim):
+            if heuristics.choose_traversal(at.meta, m) is \
+                    heuristics.Traversal.OUTPUT_ORIENTED:
+                extra += x.nnz * 8                     # perm + rows (i32)
+        sfc = x.nnz * (max(1, -(-enc.storage_bits_sfc() // 32)) * 4 + vb)
+        csf = baselines.CsfAll(x).storage_bytes()
+        hic = baselines.build_hicoo(x, block_bits=7).storage_bytes()
+        emit(f"storage/{name}/coo", 0.0, f"bytes={coo};rel=1.00")
+        emit(f"storage/{name}/alto", 0.0,
+             f"bytes={alto_b};rel={alto_b / coo:.2f}")
+        emit(f"storage/{name}/alto_adaptive", 0.0,
+             f"bytes={alto_b + extra};rel={(alto_b + extra) / coo:.2f}")
+        emit(f"storage/{name}/hicoo", 0.0,
+             f"bytes={hic};rel={hic / coo:.2f}")
+        emit(f"storage/{name}/zmorton_sfc", 0.0,
+             f"bytes={sfc};rel={sfc / coo:.2f}")
+        emit(f"storage/{name}/csf_all", 0.0,
+             f"bytes={csf};rel={csf / coo:.2f}")
+
+
+if __name__ == "__main__":
+    run()

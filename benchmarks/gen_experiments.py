@@ -1,0 +1,129 @@
+"""Generate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dry-run JSON artifacts (baseline + optimized sweeps).
+
+  PYTHONPATH=src python -m benchmarks.gen_experiments > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HERE = os.path.join(os.path.dirname(__file__), "..")
+BASE = os.path.join(HERE, "experiments", "dryrun_baseline")
+OPT = os.path.join(HERE, "experiments", "dryrun")
+
+ARCH_ORDER = ["qwen2-1.5b", "glm4-9b", "smollm-360m", "minitron-8b",
+              "whisper-base", "xlstm-1.3b", "qwen2-vl-72b",
+              "granite-moe-3b-a800m", "kimi-k2-1t-a32b", "zamba2-7b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(d):
+    recs = {}
+    for f in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(f))
+        mesh = "multipod" if "pod=2" in r["mesh"] else "pod"
+        recs[(r["arch"], r["shape"], mesh)] = r
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def frac(rl):
+    """Roofline fraction: compute term / dominant term (how close the cell
+    is to being compute-limited, the best case)."""
+    dom = max(rl["t_compute"], rl["t_memory"], rl["t_collective"])
+    return rl["t_compute"] / dom if dom > 0 else 0.0
+
+
+def dryrun_table(recs, mesh):
+    rows = ["| arch | shape | status | compile s | args GiB/dev | "
+            "temp GiB/dev | peak GiB/dev | collectives (ar/ag/rs/a2a/cp) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, mesh))
+            if r is None:
+                continue
+            if r["status"] != "ok":
+                rows.append(f"| {a} | {s} | SKIP ({r.get('reason','')}) "
+                            f"| | | | | |")
+                continue
+            m = r["memory"]
+            c = r["collectives_raw"]["counts"]
+            cc = (f"{c['all-reduce']}/{c['all-gather']}/"
+                  f"{c['reduce-scatter']}/{c['all-to-all']}/"
+                  f"{c['collective-permute']}")
+            rows.append(
+                f"| {a} | {s} | ok | {r['compile_s']} | "
+                f"{fmt_bytes(m['argument_bytes'])} | "
+                f"{fmt_bytes(m['temp_bytes'])} | "
+                f"{fmt_bytes(m['peak_est_bytes'])} | {cc} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs, mesh):
+    rows = ["| arch | shape | t_compute s | t_memory s | t_collective s | "
+            "bottleneck | MODEL_FLOPS | useful | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, mesh))
+            if r is None or r["status"] != "ok" or "roofline" not in r:
+                continue
+            rl = r["roofline"]
+            rows.append(
+                f"| {a} | {s} | {rl['t_compute']:.3f} | "
+                f"{rl['t_memory']:.3f} | {rl['t_collective']:.3f} | "
+                f"{rl['bottleneck']} | {rl['model_flops_global']:.2e} | "
+                f"{rl['useful_ratio']:.2f} | {frac(rl):.2f} |")
+    return "\n".join(rows)
+
+
+def compare_table(base, opt, mesh):
+    rows = ["| arch | shape | dominant term (base→opt) s | peak GiB/dev "
+            "(base→opt) | useful (base→opt) |",
+            "|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            b = base.get((a, s, mesh))
+            o = opt.get((a, s, mesh))
+            if not b or not o or b["status"] != "ok" or o["status"] != "ok":
+                continue
+            if "roofline" not in b or "roofline" not in o:
+                continue
+            rb, ro = b["roofline"], o["roofline"]
+            db = max(rb["t_compute"], rb["t_memory"], rb["t_collective"])
+            do = max(ro["t_compute"], ro["t_memory"], ro["t_collective"])
+            rows.append(
+                f"| {a} | {s} | {db:.2f} → {do:.2f} "
+                f"({db / max(do, 1e-9):.2f}x) | "
+                f"{b['memory']['peak_est_bytes'] / 2**30:.1f} → "
+                f"{o['memory']['peak_est_bytes'] / 2**30:.1f} | "
+                f"{rb['useful_ratio']:.2f} → {ro['useful_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    base = load(BASE)
+    opt = load(OPT) if os.path.isdir(OPT) else {}
+    print("### Dry-run, single pod 16x16 (optimized build)\n")
+    print(dryrun_table(opt or base, "pod"))
+    print("\n### Dry-run, multi-pod 2x16x16 (optimized build)\n")
+    print(dryrun_table(opt or base, "multipod"))
+    print("\n### Roofline (single pod, baseline build)\n")
+    print(roofline_table(base, "pod"))
+    if opt:
+        print("\n### Roofline (single pod, optimized build)\n")
+        print(roofline_table(opt, "pod"))
+        print("\n### Baseline → optimized (single pod)\n")
+        print(compare_table(base, opt, "pod"))
+        print("\n### Baseline → optimized (multi-pod)\n")
+        print(compare_table(base, opt, "multipod"))
+
+
+if __name__ == "__main__":
+    main()

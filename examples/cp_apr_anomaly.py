@@ -1,0 +1,43 @@
+"""CP-APR anomaly detection on count data (the paper's §1 use case).
+
+Plants a rank-3 Poisson model plus a localized anomalous block, runs
+CP-APR MU with the adaptive ALTO heuristics, and shows the anomaly
+concentrating in one component.
+
+  PYTHONPATH=src python examples/cp_apr_anomaly.py
+"""
+import numpy as np
+
+from repro.core import alto, cpapr
+from repro.sparse import synthetic
+from repro.sparse.tensor import SparseTensor
+
+# normal traffic: planted low-rank Poisson counts
+x, _ = synthetic.lowrank_count((60, 40, 30), rank=3, nnz_target=8000,
+                               seed=0)
+# anomaly: a hot block of interactions (e.g. one scanner hitting one port)
+rng = np.random.default_rng(1)
+n_anom = 300
+a_coords = np.stack([rng.integers(50, 55, n_anom),
+                     rng.integers(30, 34, n_anom),
+                     rng.integers(25, 28, n_anom)], axis=1).astype(np.int32)
+a_vals = rng.integers(20, 60, n_anom).astype(np.float32)
+x_all = SparseTensor(x.dims, np.concatenate([x.coords, a_coords]),
+                     np.concatenate([x.values, a_vals])).deduplicate()
+
+at = alto.build(x_all, n_partitions=8)
+res = cpapr.cp_apr(at, rank=4, seed=2, track_ll=True,
+                   params=cpapr.CpaprParams(k_max=20))
+print(f"CP-APR: {res.n_outer} outer iters, policy={res.pi_policy}, "
+      f"traversals={res.traversals}")
+print(f"log-likelihood: {res.log_likelihoods[0]:.0f} -> "
+      f"{res.log_likelihoods[-1]:.0f}")
+
+# the component whose mode-0 factor concentrates on rows 50-54 is the scan
+A0 = np.asarray(res.factors[0])
+conc = A0[50:55].sum(axis=0) / (A0.sum(axis=0) + 1e-9)
+best = int(np.argmax(conc))
+print(f"anomaly concentration per component: {conc.round(3)}")
+print(f"-> component {best} captures the injected scanner "
+      f"({100 * conc[best]:.0f}% of its mode-0 mass in rows 50-54)")
+assert conc[best] > 0.5, "anomaly should dominate one component"

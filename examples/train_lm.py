@@ -1,0 +1,55 @@
+"""Train a ~100M-parameter LM for a few hundred steps on CPU with the
+production train loop (checkpointing, grad clipping, cosine schedule).
+
+By default uses a width-reduced smollm config sized to ~100M params; pass
+--full-360m to use the exact assigned smollm-360m config (slow on CPU).
+
+  PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import dataclasses
+import sys
+
+from repro.configs import get_config
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--full-360m", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    argv = ["--arch", "smollm-360m", "--steps", str(args.steps),
+            "--batch", str(args.batch), "--seq", str(args.seq),
+            "--log-every", "10"]
+    if args.ckpt_dir:
+        argv += ["--ckpt-dir", args.ckpt_dir]
+    if not args.full_360m:
+        # ~100M params: half width/depth of smollm-360m
+        import repro.configs as C
+        base = get_config("smollm-360m")
+        cfg = dataclasses.replace(
+            base, n_layers=16, d_model=768, n_heads=12, n_kv_heads=4,
+            head_dim=0, d_ff=2048, remat=False, dtype="float32")
+        # register a transient config the launcher can resolve
+        C._MODULES["smollm-100m"] = None
+        real_get = C.get_config
+
+        def patched(name):
+            if name == "smollm-100m":
+                return cfg
+            return real_get(name)
+
+        C.get_config = patched
+        train_mod.get_config = patched
+        argv[1] = "smollm-100m"
+    sys.argv = ["train"] + argv
+    train_mod.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+# The paper's primary contribution: the ALTO linearized sparse tensor
+# format and the adaptive parallel TD algorithms built on it.
+from repro.core.encoding import AltoEncoding, make_encoding
+from repro.core.alto import (AltoTensor, AltoMeta, OrientedView, build,
+                             oriented_view, linearize, delinearize,
+                             to_sparse)
+from repro.core import heuristics, mttkrp, cpals, cpapr
+
+__all__ = [
+    "AltoEncoding", "make_encoding", "AltoTensor", "AltoMeta",
+    "OrientedView", "build", "oriented_view", "linearize", "delinearize",
+    "to_sparse", "heuristics", "mttkrp", "cpals", "cpapr",
+]

@@ -1,0 +1,229 @@
+"""ALTO tensor: linearized storage, balanced partitioning, traversal views.
+
+Format generation (paper §3.1) happens host-side: linearize (bit gather),
+sort by the linearized index, then impose the balanced partitioning of §4.1.
+The resulting `AltoTensor` is a JAX pytree whose static aux data (encoding,
+partition intervals, fiber-reuse stats) drives *trace-time* selection of the
+paper's adaptive execution variants — the TPU analogue of the paper's
+runtime heuristics (JAX control flow must be static under jit).
+
+Partitioning: the sorted nonzero list is cut into L equal-size segments
+(perfect workload balance). Each segment's bounding box `T_l` (per-mode
+closed intervals) is computed exactly; intervals of different partitions may
+overlap (paper Fig. 7) — the pull-based reduction resolves the overlap.
+The max interval length per mode is a *static* bound used to size the dense
+`Temp` scratch (VMEM tile in the Pallas kernel).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encoding as enc_mod
+from repro.core.encoding import AltoEncoding, make_encoding
+from repro.sparse.tensor import SparseTensor
+
+
+# ---------------------------------------------------------------------------
+# Device-side bit scatter/gather (jnp) — mirrors encoding.linearize_np.
+# ---------------------------------------------------------------------------
+
+def delinearize(enc: AltoEncoding, words: jnp.ndarray) -> jnp.ndarray:
+    """(..., n_words) u32 -> (..., N) int32 coordinates (bit scatter)."""
+    out = [jnp.zeros(words.shape[:-1], dtype=jnp.uint32)
+           for _ in range(enc.ndim)]
+    for r in enc.runs:
+        chunk = (words[..., r.word] >> np.uint32(r.dst_shift)) & np.uint32(
+            r.mask)
+        out[r.mode] = out[r.mode] | (chunk << np.uint32(r.src_shift))
+    return jnp.stack(out, axis=-1).astype(jnp.int32)
+
+
+def linearize(enc: AltoEncoding, coords: jnp.ndarray) -> jnp.ndarray:
+    """(..., N) int coords -> (..., n_words) u32 index (bit gather)."""
+    c = coords.astype(jnp.uint32)
+    out = [jnp.zeros(coords.shape[:-1], dtype=jnp.uint32)
+           for _ in range(enc.n_words)]
+    for r in enc.runs:
+        chunk = (c[..., r.mode] >> np.uint32(r.src_shift)) & np.uint32(r.mask)
+        out[r.word] = out[r.word] | (chunk << np.uint32(r.dst_shift))
+    return jnp.stack(out, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# AltoTensor pytree
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AltoMeta:
+    """Hashable static metadata travelling in the pytree aux."""
+    enc: AltoEncoding
+    nnz: int                      # real nonzeros (before padding)
+    n_partitions: int
+    temp_rows: tuple[int, ...]    # per mode: max partition interval length
+    fiber_reuse: tuple[float, ...]  # per mode: avg nnz per fiber
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return self.enc.dims
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AltoTensor:
+    """Linearized sparse tensor, sorted by ALTO index, padded to L·chunk."""
+
+    meta: AltoMeta
+    words: jnp.ndarray        # (Mp, n_words) u32, ascending
+    values: jnp.ndarray       # (Mp,)
+    part_start: jnp.ndarray   # (L, N) int32 — T_l^s per partition/mode
+    part_end: jnp.ndarray     # (L, N) int32 — T_l^e (inclusive)
+
+    def tree_flatten(self):
+        return ((self.words, self.values, self.part_start, self.part_end),
+                self.meta)
+
+    @classmethod
+    def tree_unflatten(cls, meta, leaves):
+        return cls(meta, *leaves)
+
+    # convenience ---------------------------------------------------------
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return self.meta.dims
+
+    @property
+    def nnz(self) -> int:
+        return self.meta.nnz
+
+    @property
+    def n_partitions(self) -> int:
+        return self.meta.n_partitions
+
+    def coords(self) -> jnp.ndarray:
+        return delinearize(self.meta.enc, self.words)
+
+    def storage_bytes(self) -> int:
+        """Index + value storage (paper Fig. 12 accounting, real nnz)."""
+        idx = self.meta.nnz * self.meta.enc.runtime_index_bits() // 8
+        val = self.meta.nnz * self.values.dtype.itemsize
+        return idx + val
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class OrientedView:
+    """Output-oriented traversal copy for one mode (paper Fig. 8 right).
+
+    Nonzeros permuted into ascending order of the target mode (then ALTO
+    order within a row for input locality). Conflict-free updates become a
+    sorted segment reduction — the TPU-native form of "atomics only at
+    partition boundaries".
+    """
+    meta: AltoMeta
+    mode: int
+    rows: jnp.ndarray     # (Mp,) int32 target-mode index, ascending
+    words: jnp.ndarray    # (Mp, n_words) u32 permuted ALTO indices
+    values: jnp.ndarray   # (Mp,)
+    perm: jnp.ndarray     # (Mp,) int32 position in ALTO order (for Π reuse)
+
+    def tree_flatten(self):
+        return ((self.rows, self.words, self.values, self.perm),
+                (self.meta, self.mode))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(aux[0], aux[1], *leaves)
+
+
+# ---------------------------------------------------------------------------
+# Format generation (host side)
+# ---------------------------------------------------------------------------
+
+def fiber_reuse_stats(enc: AltoEncoding, words_np: np.ndarray,
+                      nnz: int) -> tuple[float, ...]:
+    """Average nonzeros per fiber along each mode (paper §4.2).
+
+    #fibers along mode n = #distinct coordinates with mode-n bits masked
+    out of the linearized index — ALTO makes this a cheap masked unique.
+    """
+    masks = enc.mode_masks()           # (N, W)
+    out = []
+    w = words_np[:nnz]
+    for n in range(enc.ndim):
+        masked = w & ~masks[n][None, :]
+        n_fibers = len(np.unique(masked, axis=0)) if nnz else 1
+        out.append(float(nnz) / max(1, n_fibers))
+    return tuple(out)
+
+
+def build(x: SparseTensor, n_partitions: int = 8,
+          compute_reuse: bool = True) -> AltoTensor:
+    """ALTO format generation: linearize -> sort -> partition (paper §3.1)."""
+    enc = make_encoding(x.dims)
+    L = max(1, int(n_partitions))
+    words = enc_mod.linearize_np(enc, x.coords)
+    order = enc_mod.sort_key_np(words)
+    words = words[order]
+    values = np.asarray(x.values)[order]
+    coords = x.coords[order]          # reordered original coords: cheaper
+    M = x.nnz                         # than a delinearization pass
+
+    # Pad to a multiple of L with value-0 copies of the last element so the
+    # padded tail stays inside the final partition's bounding box.
+    chunk = -(-max(M, L) // L)
+    Mp = chunk * L
+    if Mp > M:
+        pad = Mp - M
+        if M == 0:
+            pad_words = np.zeros((pad, enc.n_words), dtype=np.uint32)
+            pad_coords = np.zeros((pad, enc.ndim), dtype=coords.dtype)
+        else:
+            pad_words = np.repeat(words[-1:], pad, axis=0)
+            pad_coords = np.repeat(coords[-1:], pad, axis=0)
+        words = np.concatenate([words, pad_words], axis=0)
+        values = np.concatenate(
+            [values, np.zeros(pad, dtype=values.dtype)], axis=0)
+        coords = np.concatenate([coords, pad_coords], axis=0)
+    cc = coords.reshape(L, chunk, enc.ndim)
+    part_start = cc.min(axis=1).astype(np.int32)          # (L, N)
+    part_end = cc.max(axis=1).astype(np.int32)
+    temp_rows = tuple(int((part_end[:, n] - part_start[:, n]).max()) + 1
+                      for n in range(enc.ndim))
+
+    reuse = (fiber_reuse_stats(enc, words, M) if compute_reuse
+             else tuple(float("nan") for _ in range(enc.ndim)))
+    meta = AltoMeta(enc=enc, nnz=M, n_partitions=L, temp_rows=temp_rows,
+                    fiber_reuse=reuse)
+    return AltoTensor(meta=meta,
+                      words=jnp.asarray(words),
+                      values=jnp.asarray(values),
+                      part_start=jnp.asarray(part_start),
+                      part_end=jnp.asarray(part_end))
+
+
+def oriented_view(at: AltoTensor, mode: int) -> OrientedView:
+    """Build the output-oriented permutation for ``mode`` (host side)."""
+    words_np = np.asarray(at.words)
+    values_np = np.asarray(at.values)
+    coords = enc_mod.delinearize_np(at.meta.enc, words_np)
+    rows = coords[:, mode]
+    # stable sort by row keeps ALTO order within each row (input locality)
+    order = np.argsort(rows, kind="stable")
+    return OrientedView(meta=at.meta, mode=mode,
+                        rows=jnp.asarray(rows[order].astype(np.int32)),
+                        words=jnp.asarray(words_np[order]),
+                        values=jnp.asarray(values_np[order]),
+                        perm=jnp.asarray(order.astype(np.int32)))
+
+
+def to_sparse(at: AltoTensor) -> SparseTensor:
+    """Back to COO (drops padding)."""
+    coords = np.asarray(at.coords())[:at.nnz]
+    values = np.asarray(at.values)[:at.nnz]
+    return SparseTensor(at.dims, coords, values)

@@ -1,0 +1,192 @@
+"""CP-APR multiplicative updates on ALTO tensors (paper Alg. 2 / Alg. 5).
+
+Poisson tensor decomposition for non-negative count data. The Φ (model
+update) kernel — >99% of runtime per the paper §5.3 — runs through the
+generic ALTO row-reduction engine with the paper's two adaptive choices:
+
+  * traversal: recursive (Temp + pull reduction) vs output-oriented
+    (sorted segment reduction), per fiber reuse (§4.2);
+  * Π policy: ALTO-PRE (precompute the (M, R) Khatri-Rao rows once per
+    outer iteration) vs ALTO-OTF (recompute per inner iteration), per the
+    memory heuristic (§4.3).
+
+The inner multiplicative-update loop (Alg. 2 lines 7-14) is a lax.scan with
+freeze-on-convergence masking so the whole mode update jits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import heuristics
+from repro.core.alto import (AltoTensor, OrientedView, delinearize,
+                             oriented_view)
+from repro.core.mttkrp import (krp_rows, row_reduce_oriented,
+                               row_reduce_recursive)
+
+
+@dataclasses.dataclass(frozen=True)
+class CpaprParams:
+    """Algorithmic parameters of Alg. 2 (defaults follow the paper / ttb)."""
+    k_max: int = 50          # max outer iterations
+    l_max: int = 10          # max inner iterations (paper uses 10)
+    tau: float = 1e-4        # KKT convergence tolerance
+    kappa: float = 1e-2      # inadmissible-zero avoidance adjustment
+    kappa_tol: float = 1e-10 # potential inadmissible zero threshold
+    eps_div: float = 1e-10   # minimum divisor
+
+
+@dataclasses.dataclass
+class CpaprResult:
+    lam: jnp.ndarray
+    factors: list[jnp.ndarray]
+    kkt_violations: list[float]    # per outer iteration (max over modes)
+    log_likelihoods: list[float]
+    n_outer: int
+    n_inner_total: int
+    pi_policy: str
+    traversals: list[str]
+
+
+def init_factors(dims: Sequence[int], rank: int, seed: int = 0,
+                 total: float = 1.0, dtype=jnp.float32):
+    """Random positive factors, columns 1-normalized; λ carries the mass."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(dims))
+    factors = []
+    for k, I in zip(keys, dims):
+        A = jax.random.uniform(k, (I, rank), dtype=dtype, minval=0.1,
+                               maxval=1.1)
+        factors.append(A / jnp.sum(A, axis=0, keepdims=True))
+    lam = jnp.full((rank,), total / rank, dtype=dtype)
+    return lam, factors
+
+
+def _phi(rows, vals, krp, B, eps):
+    """Per-nonzero Φ contribution: (v / max(<B[i],krp>, ε)) · krp."""
+    denom = jnp.maximum(jnp.sum(B[rows] * krp, axis=-1), eps)
+    return (vals / denom)[:, None] * krp
+
+
+def _mode_update(at: AltoTensor, view: OrientedView | None, mode: int,
+                 lam, factors, phi_prev, first_outer: bool,
+                 pre_pi: bool, p: CpaprParams):
+    """One full Alg. 2 mode update (lines 4-15), jit-able."""
+    A = factors[mode]
+    # Line 4: inadmissible-zero adjustment (skipped on the first outer iter).
+    if first_outer:
+        S = jnp.zeros_like(A)
+    else:
+        S = jnp.where((A < p.kappa_tol) & (phi_prev > 1.0), p.kappa, 0.0)
+    B0 = (A + S) * lam[None, :]                       # line 5: B = (A+S)Λ
+
+    use_oriented = view is not None
+    if use_oriented:
+        rows, vals, words = view.rows, view.values, view.words
+    else:
+        words, vals = at.words, at.values
+        rows = delinearize(at.meta.enc, words)[:, mode]
+
+    coords = delinearize(at.meta.enc, words)
+    if pre_pi:
+        pi = krp_rows(coords, factors, mode)          # line 6 (Π, M×R rows)
+
+    def phi_of(B):
+        krp = pi if pre_pi else krp_rows(coords, factors, mode)  # line 9
+        contrib = _phi(rows, vals, krp, B, p.eps_div)
+        if use_oriented:
+            return row_reduce_oriented(view, contrib)
+        return row_reduce_recursive(at, mode, contrib)
+
+    def inner(carry, _):
+        B, done, n_inner = carry
+        Phi = phi_of(B)                               # line 8
+        kkt = jnp.max(jnp.abs(jnp.minimum(B, 1.0 - Phi)))  # line 9
+        now_done = done | (kkt < p.tau)
+        B_new = jnp.where(now_done, B, B * Phi)       # line 13 (frozen after
+        n_inner = n_inner + jnp.where(now_done, 0, 1)  # convergence)
+        return (B_new, now_done, n_inner), (Phi, kkt)
+
+    (B, done, n_inner), (phis, kkts) = jax.lax.scan(
+        inner, (B0, jnp.asarray(False), jnp.asarray(0, jnp.int32)),
+        None, length=p.l_max)
+    Phi_last = phis[-1]
+
+    lam_new = jnp.sum(B, axis=0)                      # line 15: λ = eᵀB
+    lam_new = jnp.where(lam_new > 0, lam_new, 1.0)
+    A_new = B / lam_new[None, :]
+    # Mode converged iff no inner update was applied.
+    mode_converged = n_inner == 0
+    kkt_first = kkts[0]
+    return A_new, lam_new, Phi_last, mode_converged, n_inner, kkt_first
+
+
+def log_likelihood(at: AltoTensor, lam, factors, eps=1e-10):
+    """Poisson log-likelihood Σ x·log(m) − Σ m (columns 1-normalized)."""
+    coords = delinearize(at.meta.enc, at.words)
+    prod = jnp.broadcast_to(lam[None, :], (coords.shape[0], lam.shape[0]))
+    for m, A in enumerate(factors):
+        prod = prod * A[coords[:, m]]
+    model = jnp.maximum(jnp.sum(prod, axis=-1), eps)
+    ll = jnp.sum(at.values * jnp.log(model))          # padding: v=0 rows
+    return ll - jnp.sum(lam)
+
+
+def cp_apr(at: AltoTensor, rank: int, params: CpaprParams | None = None,
+           seed: int = 0, pi_policy: str | None = None,
+           views: dict[int, OrientedView] | None = None,
+           track_ll: bool = False) -> CpaprResult:
+    """CP-APR MU driver (Alg. 2). `pi_policy`: None=adaptive|'pre'|'otf'."""
+    p = params or CpaprParams()
+    N = len(at.dims)
+    total = float(jnp.sum(at.values))
+    lam, factors = init_factors(at.dims, rank, seed=seed, total=total,
+                                dtype=at.values.dtype)
+
+    if pi_policy is None:
+        pi_policy = heuristics.choose_pi_policy(at.meta, rank).value
+    pre_pi = pi_policy == "pre"
+
+    if views is None:
+        views = {}
+        for n in range(N):
+            if (heuristics.choose_traversal(at.meta, n)
+                    is heuristics.Traversal.OUTPUT_ORIENTED):
+                views[n] = oriented_view(at, n)
+    traversals = ["oriented" if n in views else "recursive"
+                  for n in range(N)]
+
+    update = jax.jit(_mode_update,
+                     static_argnames=("mode", "first_outer", "pre_pi", "p"))
+
+    phi_prev = [jnp.zeros_like(A) for A in factors]
+    kkt_hist: list[float] = []
+    ll_hist: list[float] = []
+    n_inner_total = 0
+    outer = 0
+    for outer in range(1, p.k_max + 1):
+        all_converged = True
+        kkt_max = 0.0
+        for n in range(N):
+            A, lam, phi_n, conv, n_inner, kkt = update(
+                at, views.get(n), n, lam, factors, phi_prev[n],
+                first_outer=(outer == 1), pre_pi=pre_pi, p=p)
+            factors = list(factors)
+            factors[n] = A
+            phi_prev[n] = phi_n
+            n_inner_total += int(n_inner)
+            all_converged &= bool(conv)
+            kkt_max = max(kkt_max, float(kkt))
+        kkt_hist.append(kkt_max)
+        if track_ll:
+            ll_hist.append(float(log_likelihood(at, lam, factors)))
+        if all_converged:                              # lines 17-19
+            break
+    return CpaprResult(lam=lam, factors=factors, kkt_violations=kkt_hist,
+                       log_likelihoods=ll_hist, n_outer=outer,
+                       n_inner_total=n_inner_total, pi_policy=pi_policy,
+                       traversals=traversals)

@@ -1,0 +1,71 @@
+"""Input-aware adaptation heuristics (paper §4.2, §4.3, Table 1).
+
+All decisions are made from *static* tensor statistics at build/trace time,
+selecting which compiled variant runs — the JAX/TPU analogue of the paper's
+runtime dispatch (jit control flow must be static).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+from repro.core.alto import AltoMeta
+
+# Paper §4.2: the two-stage buffered accumulation costs at worst 4 memory
+# operations (2 reads + 2 writes); recursive traversal pays off only when the
+# average reuse per output fiber exceeds that.
+BUFFERED_ACCUM_COST = 4.0
+
+# Paper §5.1.2 (Table 1) classification thresholds.
+HIGH_REUSE = 8.0
+MEDIUM_REUSE = 5.0
+
+# Fast-memory budget used by the PRE/OTF decision. On the TPU target this is
+# per-core VMEM; on the CPU test host it approximates L2+L3 per core.
+DEFAULT_FAST_MEM_BYTES = 128 * 1024 * 1024
+
+
+class Traversal(enum.Enum):
+    RECURSIVE = "recursive"          # ALTO order + Temp + pull reduction
+    OUTPUT_ORIENTED = "oriented"     # output-mode order + segment reduction
+
+
+class PiPolicy(enum.Enum):
+    PRE = "pre"    # precompute & stream the (M, R) Khatri-Rao rows
+    OTF = "otf"    # recompute KRP rows on the fly
+
+
+def classify_reuse(reuse: float) -> str:
+    if reuse > HIGH_REUSE:
+        return "high"
+    if reuse >= MEDIUM_REUSE:
+        return "medium"
+    return "limited"
+
+
+def tensor_reuse_class(meta: AltoMeta) -> str:
+    """A tensor is limited/medium if ANY mode is (paper §5.1.2)."""
+    classes = [classify_reuse(r) for r in meta.fiber_reuse]
+    for level in ("limited", "medium"):
+        if level in classes:
+            return level
+    return "high"
+
+
+def choose_traversal(meta: AltoMeta, mode: int) -> Traversal:
+    """Recursive traversal iff fiber reuse amortizes the buffered
+    accumulation (> 4 memory ops), else output-oriented (paper §4.2)."""
+    if meta.fiber_reuse[mode] > BUFFERED_ACCUM_COST:
+        return Traversal.RECURSIVE
+    return Traversal.OUTPUT_ORIENTED
+
+
+def choose_pi_policy(meta: AltoMeta, rank: int, value_bytes: int = 4,
+                     fast_mem_bytes: int = DEFAULT_FAST_MEM_BYTES
+                     ) -> PiPolicy:
+    """ALTO-PRE iff reuse is low AND factors overflow fast memory (§4.3)."""
+    factor_bytes = sum(I * rank * value_bytes for I in meta.dims)
+    low_reuse = tensor_reuse_class(meta) == "limited"
+    if low_reuse and factor_bytes > fast_mem_bytes:
+        return PiPolicy.PRE
+    return PiPolicy.OTF

@@ -1,0 +1,151 @@
+"""MTTKRP and the generic ALTO sparse row-reduction engine (paper Alg. 3/4).
+
+Every ALTO tensor kernel in this framework (MTTKRP for CP-ALS, Φ for CP-APR)
+has the shape: *per-nonzero contribution of R values, reduced by the target
+mode row*. The two paper traversals are implemented as:
+
+  * recursive      — ALTO-ordered chunks per balanced partition, local dense
+                     ``Temp`` buffers bounded by the partition's mode
+                     interval, then a pull-based reduction into the output
+                     (Alg. 4 lines 6 / 14-18).
+  * output-oriented— nonzeros permuted by target row; conflict-free updates
+                     become a sorted segment reduction (the TPU-native form
+                     of "atomics only at partition boundaries").
+
+`mttkrp_adaptive` picks the traversal per mode from fiber-reuse statistics
+(heuristics.choose_traversal) at trace time.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import heuristics
+from repro.core.alto import AltoTensor, OrientedView, delinearize
+
+
+def krp_rows(coords: jnp.ndarray, factors: Sequence[jnp.ndarray],
+             mode: int) -> jnp.ndarray:
+    """Khatri-Rao rows: prod_{m != mode} A^(m)[i_m, :]  -> (..., R)."""
+    out = None
+    for m, A in enumerate(factors):
+        if m == mode:
+            continue
+        rows = A[coords[..., m]]
+        out = rows if out is None else out * rows
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Baseline: COO scatter-add (the paper's list-based baseline, §2.3.1)
+# ---------------------------------------------------------------------------
+
+def mttkrp_coo(coords: jnp.ndarray, values: jnp.ndarray,
+               factors: Sequence[jnp.ndarray], mode: int) -> jnp.ndarray:
+    """COO MTTKRP: unordered scatter-add (XLA scatter ~ CPU atomics)."""
+    contrib = values[:, None] * krp_rows(coords, factors, mode)
+    out_dim = factors[mode].shape[0]
+    out = jnp.zeros((out_dim, contrib.shape[-1]), dtype=contrib.dtype)
+    return out.at[coords[:, mode]].add(contrib)
+
+
+# ---------------------------------------------------------------------------
+# Generic ALTO row reductions
+# ---------------------------------------------------------------------------
+
+def row_reduce_recursive(at: AltoTensor, mode: int,
+                         contrib: jnp.ndarray) -> jnp.ndarray:
+    """Reduce (Mp, R) contributions by target row, recursive traversal.
+
+    Per partition l: Temp_l[i - T_l^s, :] += contrib (Alg. 4 line 6), then
+    out[b, :] += Temp_l[b - T_l^s, :] for all overlapping l (lines 14-18).
+    """
+    meta = at.meta
+    L = meta.n_partitions
+    Mp = at.words.shape[0]
+    chunk = Mp // L
+    R = contrib.shape[-1]
+    I_n = meta.dims[mode]
+    T = meta.temp_rows[mode]
+
+    coords = delinearize(meta.enc, at.words)
+    rows = coords[:, mode].reshape(L, chunk)
+    local = rows - at.part_start[:, mode][:, None]          # in [0, T)
+    c = contrib.reshape(L, chunk, R)
+
+    def one_partition(loc, con):
+        return jnp.zeros((T, R), dtype=con.dtype).at[loc].add(con)
+
+    temp = jax.vmap(one_partition)(local, c)                 # (L, T, R)
+
+    # Pull-based reduction. Rows past the partition interval hold zeros;
+    # clamp their global index so the scatter stays in bounds (adds zeros).
+    out_rows = at.part_start[:, mode][:, None] + jnp.arange(T)[None, :]
+    out_rows = jnp.minimum(out_rows, I_n - 1)                # (L, T)
+    out = jnp.zeros((I_n, R), dtype=contrib.dtype)
+    return out.at[out_rows].add(temp)
+
+
+def row_reduce_oriented(view: OrientedView,
+                        contrib: jnp.ndarray) -> jnp.ndarray:
+    """Reduce (Mp, R) contributions by target row, output-oriented order.
+
+    `contrib` must already be in the view's (row-sorted) element order.
+    Sorted segment-sum == conflict-free updates with boundary merges.
+    """
+    I_n = view.meta.dims[view.mode]
+    return jax.ops.segment_sum(contrib, view.rows, num_segments=I_n,
+                               indices_are_sorted=True)
+
+
+# ---------------------------------------------------------------------------
+# MTTKRP variants
+# ---------------------------------------------------------------------------
+
+def mttkrp_recursive(at: AltoTensor, factors: Sequence[jnp.ndarray],
+                     mode: int) -> jnp.ndarray:
+    coords = delinearize(at.meta.enc, at.words)
+    contrib = at.values[:, None] * krp_rows(coords, factors, mode)
+    return row_reduce_recursive(at, mode, contrib)
+
+
+def mttkrp_oriented(view: OrientedView, factors: Sequence[jnp.ndarray]
+                    ) -> jnp.ndarray:
+    coords = delinearize(view.meta.enc, view.words)
+    contrib = view.values[:, None] * krp_rows(coords, factors, view.mode)
+    return row_reduce_oriented(view, contrib)
+
+
+def mttkrp_adaptive(at: AltoTensor,
+                    views: dict[int, OrientedView] | None,
+                    factors: Sequence[jnp.ndarray], mode: int
+                    ) -> jnp.ndarray:
+    """Adaptive conflict resolution (paper §4.2), selected at trace time."""
+    choice = heuristics.choose_traversal(at.meta, mode)
+    if (choice is heuristics.Traversal.OUTPUT_ORIENTED and views
+            and mode in views):
+        return mttkrp_oriented(views[mode], factors)
+    return mttkrp_recursive(at, factors, mode)
+
+
+def dense_mttkrp_reference(dense, factors: Sequence[jnp.ndarray],
+                           mode: int) -> jnp.ndarray:
+    """Oracle: matricized-dense einsum MTTKRP (tests only)."""
+    import numpy as np
+    dense = jnp.asarray(dense)
+    N = dense.ndim
+    letters = "abcdefghij"[:N]
+    out = None
+    # X_(n) (KRP of others) == einsum over all other modes with their factor
+    operands = []
+    subs = [letters]
+    for m in range(N):
+        if m == mode:
+            continue
+        operands.append(factors[m])
+        subs.append(letters[m] + "r")
+    expr = ",".join(subs) + "->" + letters[mode] + "r"
+    return jnp.einsum(expr, dense, *operands)

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: partitioned MTTKRP over ALTO tensors (paper Alg. 4).
+
+One grid step processes one balanced ALTO partition (and one rank tile) and
+produces that partition's dense ``Temp`` accumulator — the VMEM-resident
+local buffer of the paper's recursive traversal. The pull-based reduction
+(Alg. 4 lines 14-18) merges partials outside the kernel (see ops.py).
+
+TPU adaptation of the CPU algorithm:
+  * delinearization is the static shift/or chain (VPU) fused ahead of the
+    FLOP work, so index decode overlaps the value stream;
+  * factor-row gather uses jnp.take on the VMEM-resident factor tile;
+  * scatter-add into Temp is expressed as a ONE-HOT MATMUL
+    (``onehot(local_rows).T @ contrib``), putting the irregular update on
+    the MXU systolic array instead of emulating atomics — TPUs have no
+    atomics, and this is the highest-throughput conflict resolution for
+    bounded-interval partitions (the ALTO interval bound is what keeps the
+    one-hot operand VMEM-sized);
+  * the mode intervals give a *static* Temp height, so the kernel's VMEM
+    footprint is known at compile time.
+
+VMEM budget per grid step (f32): block_m·(W/8 + 1 + T) + T·r_block +
+sum_m I_m·r_block words — callers pick block_m / r_block so this fits 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.encoding import AltoEncoding
+from repro.kernels.delinearize import _delinearize_kernel  # noqa: F401
+
+
+def _decode(enc: AltoEncoding, words):
+    import numpy as np
+    cols = [jnp.zeros(words.shape[:-1], dtype=jnp.uint32)
+            for _ in range(enc.ndim)]
+    for r in enc.runs:
+        chunk = (words[..., r.word] >> np.uint32(r.dst_shift)) \
+            & np.uint32(r.mask)
+        cols[r.mode] = cols[r.mode] | (chunk << np.uint32(r.src_shift))
+    return [c.astype(jnp.int32) for c in cols]
+
+
+def _mttkrp_partial_kernel(enc: AltoEncoding, mode: int, temp_rows: int,
+                           words_ref, vals_ref, start_ref, *refs):
+    """Grid step: one (partition, rank-tile). Emits Temp_l (1, T, r_block)."""
+    factor_refs = refs[:-1]
+    out_ref = refs[-1]
+    words = words_ref[...]                    # (chunk, W)
+    vals = vals_ref[...]                      # (chunk,)
+    coords = _decode(enc, words)              # N × (chunk,)
+
+    krp = None                                # Khatri-Rao rows, (chunk, rb)
+    fi = 0
+    for m in range(enc.ndim):
+        if m == mode:
+            continue
+        rows = jnp.take(factor_refs[fi][...], coords[m], axis=0)
+        krp = rows if krp is None else krp * rows
+        fi += 1
+    contrib = vals[:, None] * krp             # (chunk, rb)
+
+    local = coords[mode] - start_ref[0, mode]  # in [0, temp_rows)
+    onehot = (local[:, None] == jax.lax.iota(jnp.int32, temp_rows)[None, :]
+              ).astype(contrib.dtype)          # (chunk, T)
+    # Scatter-add on the MXU: Temp = onehotᵀ · contrib.
+    out_ref[0] = jax.lax.dot_general(
+        onehot, contrib, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+def mttkrp_partials_pallas(enc: AltoEncoding, mode: int, temp_rows: int,
+                           words: jnp.ndarray, values: jnp.ndarray,
+                           part_start: jnp.ndarray, factors,
+                           r_block: int | None = None,
+                           interpret: bool = True) -> jnp.ndarray:
+    """Per-partition Temp buffers: (L, temp_rows, R)."""
+    L = part_start.shape[0]
+    Mp, W = words.shape
+    chunk = Mp // L
+    R = factors[0].shape[1]
+    rb = r_block or R
+    if R % rb:
+        raise ValueError(f"rank {R} not a multiple of r_block {rb}")
+    others = [f for m, f in enumerate(factors) if m != mode]
+
+    in_specs = [
+        pl.BlockSpec((chunk, W), lambda l, r: (l, 0)),        # words
+        pl.BlockSpec((chunk,), lambda l, r: (l,)),            # values
+        pl.BlockSpec((1, len(factors)), lambda l, r: (l, 0)),  # part_start
+    ] + [
+        pl.BlockSpec((f.shape[0], rb), lambda l, r: (0, r)) for f in others
+    ]
+    return pl.pallas_call(
+        functools.partial(_mttkrp_partial_kernel, enc, mode, temp_rows),
+        grid=(L, R // rb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, temp_rows, rb), lambda l, r: (l, 0, r)),
+        out_shape=jax.ShapeDtypeStruct((L, temp_rows, R), factors[0].dtype),
+        interpret=interpret,
+    )(words, values, part_start, *others)

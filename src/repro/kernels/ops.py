@@ -1,0 +1,85 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On the CPU test host every kernel runs with interpret=True (the Pallas
+interpreter executes the kernel body in Python); on TPU the same call sites
+compile to Mosaic. `interpret=None` auto-detects.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.alto import AltoTensor
+from repro.core.encoding import AltoEncoding
+from repro.kernels import cpapr_phi as _phi
+from repro.kernels import delinearize as _delin
+from repro.kernels import mttkrp as _mttkrp
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def delinearize(enc: AltoEncoding, words: jnp.ndarray,
+                block_m: int = _delin.DEFAULT_BLOCK_M,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """ALTO index words -> int32 coordinates (bit-scatter kernel)."""
+    M = words.shape[0]
+    bm = min(block_m, M)
+    while M % bm:
+        bm -= 1
+    fn = jax.jit(functools.partial(
+        _delin.delinearize_pallas, enc, block_m=bm,
+        interpret=_auto_interpret(interpret)))
+    return fn(words)
+
+
+def pull_reduction(partials: jnp.ndarray, part_start_mode: jnp.ndarray,
+                   out_dim: int) -> jnp.ndarray:
+    """Merge per-partition Temp buffers (Alg. 4 lines 14-18)."""
+    L, T, R = partials.shape
+    rows = part_start_mode[:, None] + jnp.arange(T)[None, :]
+    rows = jnp.minimum(rows, out_dim - 1)
+    out = jnp.zeros((out_dim, R), partials.dtype)
+    return out.at[rows].add(partials)
+
+
+def mttkrp(at: AltoTensor, factors, mode: int,
+           r_block: int | None = None,
+           interpret: bool | None = None) -> jnp.ndarray:
+    """Full MTTKRP: Pallas partials kernel + pull reduction."""
+    meta = at.meta
+
+    @jax.jit
+    def run(words, values, part_start, factors):
+        partials = _mttkrp.mttkrp_partials_pallas(
+            meta.enc, mode, meta.temp_rows[mode], words, values, part_start,
+            factors, r_block=r_block, interpret=_auto_interpret(interpret))
+        return pull_reduction(partials, part_start[:, mode],
+                              meta.dims[mode])
+
+    return run(at.words, at.values, at.part_start, list(factors))
+
+
+def cpapr_phi(at: AltoTensor, B: jnp.ndarray, mode: int,
+              factors=None, pi: jnp.ndarray | None = None,
+              eps: float = 1e-10,
+              interpret: bool | None = None) -> jnp.ndarray:
+    """Full fused Φ update: Pallas partials kernel + pull reduction."""
+    meta = at.meta
+
+    @jax.jit
+    def run(words, values, part_start, B, factors, pi):
+        partials = _phi.phi_partials_pallas(
+            meta.enc, mode, meta.temp_rows[mode], eps, words, values,
+            part_start, B, factors=factors, pi=pi,
+            interpret=_auto_interpret(interpret))
+        return pull_reduction(partials, part_start[:, mode],
+                              meta.dims[mode])
+
+    return run(at.words, at.values, at.part_start, B,
+               list(factors) if factors is not None else None, pi)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.encoding import AltoEncoding
+
+
+def ref_delinearize(enc: AltoEncoding, words: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.delinearize: per-bit scatter, no run compression."""
+    cols = [jnp.zeros(words.shape[:-1], dtype=jnp.uint32)
+            for _ in range(enc.ndim)]
+    for b in range(enc.total_bits):
+        m = enc.bit_mode[b]
+        bit = (words[..., b // 32] >> np.uint32(b % 32)) & np.uint32(1)
+        cols[m] = cols[m] | (bit << np.uint32(enc.bit_pos[b]))
+    return jnp.stack(cols, axis=-1).astype(jnp.int32)
+
+
+def _krp(coords, factors, mode):
+    out = None
+    for m, A in enumerate(factors):
+        if m == mode:
+            continue
+        rows = A[coords[..., m]]
+        out = rows if out is None else out * rows
+    return out
+
+
+def ref_mttkrp_partials(enc: AltoEncoding, mode: int, temp_rows: int,
+                        words, values, part_start, factors) -> jnp.ndarray:
+    """Oracle for kernels.mttkrp: scatter-add based per-partition Temp."""
+    L = part_start.shape[0]
+    Mp = words.shape[0]
+    chunk = Mp // L
+    coords = ref_delinearize(enc, words)
+    contrib = values[:, None] * _krp(coords, factors, mode)
+    R = contrib.shape[-1]
+    local = (coords[:, mode].reshape(L, chunk)
+             - part_start[:, mode][:, None])
+    c = contrib.reshape(L, chunk, R)
+
+    def one(loc, con):
+        return jnp.zeros((temp_rows, R), dtype=con.dtype).at[loc].add(con)
+
+    return jax.vmap(one)(local, c)
+
+
+def ref_phi_partials(enc: AltoEncoding, mode: int, temp_rows: int,
+                     eps: float, words, values, part_start, B,
+                     factors=None, pi=None) -> jnp.ndarray:
+    """Oracle for kernels.cpapr_phi."""
+    L = part_start.shape[0]
+    Mp = words.shape[0]
+    chunk = Mp // L
+    coords = ref_delinearize(enc, words)
+    krp = pi if pi is not None else _krp(coords, factors, mode)
+    rows = coords[:, mode]
+    denom = jnp.maximum(jnp.sum(B[rows] * krp, axis=-1), eps)
+    contrib = (values / denom)[:, None] * krp
+    R = contrib.shape[-1]
+    local = (rows.reshape(L, chunk) - part_start[:, mode][:, None])
+    c = contrib.reshape(L, chunk, R)
+
+    def one(loc, con):
+        return jnp.zeros((temp_rows, R), dtype=con.dtype).at[loc].add(con)
+
+    return jax.vmap(one)(local, c)
+
+
+def ref_pull_reduction(partials: jnp.ndarray, part_start_mode: jnp.ndarray,
+                       out_dim: int) -> jnp.ndarray:
+    """Oracle for the pull-based reduction (Alg. 4 lines 14-18)."""
+    L, T, R = partials.shape
+    rows = part_start_mode[:, None] + jnp.arange(T)[None, :]
+    rows = jnp.minimum(rows, out_dim - 1)
+    return jnp.zeros((out_dim, R), partials.dtype).at[rows].add(partials)

@@ -1,0 +1,28 @@
+"""Production mesh builders.
+
+`make_production_mesh` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+XLA_FLAGS before any jax import and only then asks for the mesh.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod:  (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def describe(mesh) -> str:
+    return "x".join(f"{k}={v}" for k, v in mesh.shape.items())

@@ -1,0 +1,133 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+  compute term    = HLO_FLOPs / peak_FLOPs        (per-device FLOPs)
+  memory term     = HLO_bytes / HBM_bw            (per-device bytes)
+  collective term = collective_bytes / link_bw    (per-device wire bytes)
+
+`compiled.cost_analysis()` on the SPMD-partitioned module reports
+*per-device* numbers, but XLA counts loop (scan) bodies ONCE, not
+× trip-count. The dry-run therefore compiles unrolled 1-repeat and
+2-repeat calibration variants and extrapolates `total = c1 + (R-1)·(c2-c1)`
+— exact for the layer stack since every repeat contributes identical ops.
+Collective bytes are parsed from the post-SPMD optimized HLO text
+(operand sizes of all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute) and extrapolated the same way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link (ICI)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(pred|bf16|f16|f32|f64|f8e4m3fn|f8e5m2|s4|s8|"
+                       r"s16|s32|s64|u4|u8|u16|u32|u64|c64|c128)"
+                       r"\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-collective-kind operand bytes + op counts from optimized HLO."""
+    bytes_by_kind: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    count_by_kind: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        if "-done(" in line:      # async pair: count the -start only
+            continue
+        count_by_kind[kind] += 1
+        # shapes on the line: first = result (possibly tuple), rest operands
+        shapes = _SHAPE_RE.findall(line)
+        if not shapes:
+            continue
+        args = line[m.end():]
+        operand_shapes = _SHAPE_RE.findall(args)
+        use = operand_shapes if operand_shapes else shapes[1:] or shapes
+        bytes_by_kind[kind] += sum(_shape_bytes(d, s) for d, s in use)
+    return {"bytes": bytes_by_kind, "counts": count_by_kind,
+            "total_bytes": sum(bytes_by_kind.values())}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # per device
+    bytes_hbm: float             # per device
+    bytes_collective: float      # per device
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops_global: float    # 6·N·D (train) or 2·N·D (serve)
+    useful_ratio: float          # model_flops_per_dev / hlo_flops
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def derive_terms(flops: float, bytes_hbm: float, bytes_coll: float,
+                 model_flops_global: float, n_chips: int) -> RooflineTerms:
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_hbm / HBM_BW
+    t_x = bytes_coll / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    useful = (model_flops_global / n_chips) / max(flops, 1.0)
+    return RooflineTerms(flops=flops, bytes_hbm=bytes_hbm,
+                         bytes_collective=bytes_coll,
+                         t_compute=t_c, t_memory=t_m, t_collective=t_x,
+                         bottleneck=bottleneck,
+                         model_flops_global=model_flops_global,
+                         useful_ratio=useful)
+
+
+def model_flops(cfg, shape, n_active_params: int) -> float:
+    """6·N·D for training, 2·N·D per forward token for serving."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active_params * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active_params * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active_params * shape.global_batch
+
+
+def slstm_flops_correction(cfg, shape, n_slstm_layers: int) -> float:
+    """sLSTM's per-token scan body is counted once by cost analysis; add
+    the remaining (S-1) steps analytically: 4 recurrent PxP matmuls/head."""
+    if n_slstm_layers == 0 or shape.kind == "decode":
+        return 0.0
+    B = shape.global_batch
+    S = shape.seq_len
+    H = cfg.n_heads
+    P = cfg.d_model // H
+    per_step = 4 * 2 * B * H * P * P + 40 * B * H * P
+    return float(n_slstm_layers * (S - 1) * per_step)

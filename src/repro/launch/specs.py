@@ -1,0 +1,107 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, and never allocated — the dry-run lowers
+against these. Modality frontends are stubs per the assignment: audio
+supplies precomputed frame embeddings, vlm supplies patch embeddings +
+3-D M-RoPE positions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as model_lib
+from repro.models import sharding as shd
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, B: int, S: int) -> dict:
+    specs = {"tokens": _sds((B, S), I32), "labels": _sds((B, S), I32)}
+    if cfg.family == "audio":
+        specs["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), BF16)
+    if cfg.family == "vlm":
+        vis = cfg.vision_prefix
+        specs["tokens"] = _sds((B, S - vis), I32)
+        specs["patch_embeds"] = _sds((B, vis, cfg.d_model), BF16)
+        specs["positions3"] = _sds((3, B, S), I32)
+    return specs
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, specs: dict) -> dict:
+    """Batch dim over (pod, data); everything else replicated."""
+    out = {}
+    for k, s in specs.items():
+        if k == "positions3":
+            log = (None, "batch") + (None,) * (len(s.shape) - 2)
+        else:
+            log = ("batch",) + (None,) * (len(s.shape) - 1)
+        out[k] = shd.sharding_for(mesh, log, s.shape)
+    return out
+
+
+def decode_cache_logical(cfg: ModelConfig, mesh: Mesh, B: int):
+    """Pick cache sharding: batch over (pod,data) when divisible; KV heads
+    over model when divisible, else the cache sequence axis (SP)."""
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            dp *= mesh.shape[a]
+    batch_ok = B % dp == 0
+    kv_ok = cfg.n_kv_heads % mesh.shape.get("model", 1) == 0
+    return batch_ok, kv_ok
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_tree, B: int):
+    """Shardings for the stacked decode-cache pytree.
+
+    KV caches (path contains 'kv'): shard KV heads over model when
+    divisible, else sequence-parallel (SP) over the cache length; batch
+    over (pod,data) when divisible, else cache length over data too
+    (the B=1 long_500k cells). Recurrent states: heads over model.
+    """
+    batch_ok, kv_ok = decode_cache_logical(cfg, mesh, B)
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    model_n = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        is_kv = any("kv" in str(n) for n in names)
+        shape = leaf.shape                      # (n_repeats, B, ...)
+        spec: list = [None] * len(shape)
+        if batch_ok and len(shape) >= 2 and shape[1] == B:
+            spec[1] = dp_axes[0] if len(dp_axes) == 1 else dp_axes
+        if is_kv and len(shape) == 5:           # (R, B, S, KV, hd)
+            if kv_ok:
+                spec[3] = "model"
+                if not batch_ok and "data" in mesh.shape \
+                        and shape[2] % mesh.shape["data"] == 0:
+                    spec[2] = "data"            # B=1: SP over data too
+            elif shape[2] % model_n == 0:
+                spec[2] = "model"               # SP over cache length
+        elif not is_kv and len(shape) >= 3:     # recurrent state (R,B,H,..)
+            if shape[2] % model_n == 0 and shape[2] >= model_n:
+                spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Serve-step inputs: one new token + a seq_len KV cache."""
+    B, S = shape.global_batch, shape.seq_len
+    tokens = _sds((B, 1), I32)
+    cache = model_lib.abstract_cache(cfg, B, S, BF16)
+    extras = {}
+    if cfg.family == "vlm":
+        extras["positions3"] = _sds((3, B, 1), I32)
+    return tokens, cache, extras

@@ -1,0 +1,175 @@
+"""GQA attention: query-chunked full attention + single-token decode.
+
+Training / prefill use query-chunked attention (a lax.scan over query
+blocks) so the (chunk, S) logit tile — not the full (S, S) matrix — is the
+peak live activation; at 32k prefill this is the difference between an 8 GB
+and a 256 MB transient per layer. Decode attends one query over the KV
+cache with position masking.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import sharding as shd
+from repro.models.common import ParamDef
+from repro.models.rope import apply_mrope, apply_rope
+
+NEG_INF = -1e30
+
+
+def attn_def(cfg: ModelConfig, cross: bool = False) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    d = {
+        "wq": ParamDef((D, H, hd), ("fsdp", "heads", None)),
+        "wk": ParamDef((D, KV, hd), ("fsdp", "kv_heads", None)),
+        "wv": ParamDef((D, KV, hd), ("fsdp", "kv_heads", None)),
+        "wo": ParamDef((H, hd, D), ("heads", None, "fsdp"), axis=-3),
+    }
+    if cfg.qkv_bias:
+        d["bq"] = ParamDef((H, hd), ("heads", None), init="zeros")
+        d["bk"] = ParamDef((KV, hd), ("kv_heads", None), init="zeros")
+        d["bv"] = ParamDef((KV, hd), ("kv_heads", None), init="zeros")
+    return d
+
+
+def _project_qkv(cfg, p, x, kv_x=None):
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def _sdpa(q, k, v, q_pos, k_valid_upto, causal, scale):
+    """q: (B, C, KV, G, hd); k/v: (B, S, KV, hd); q_pos: (C,) absolute.
+
+    k_valid_upto: mask keys at positions > this (decode: cache fill level);
+    pass None for full validity.
+    """
+    B, S = k.shape[0], k.shape[1]
+    logits = jnp.einsum("bckgh,bskh->bkgcs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    k_pos = jnp.arange(S)
+    mask = jnp.ones((q.shape[1], S), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if k_valid_upto is not None:
+        mask &= (k_pos[None, :] <= k_valid_upto)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgcs,bskh->bckgh", w, v.astype(jnp.float32))
+    return out.astype(v.dtype)
+
+
+def attention_full(cfg: ModelConfig, p, x, positions, *, causal=True,
+                   kv_x=None, positions3=None, return_kv=False):
+    """Full-sequence attention (train / prefill). x: (B, S, D)."""
+    B, S, D = x.shape
+    KV, G = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _project_qkv(cfg, p, x, kv_x)
+    if kv_x is None and cfg.use_rope:      # self-attention -> RoPE
+        if cfg.mrope and positions3 is not None:
+            q = apply_mrope(q, positions3, cfg.rope_theta,
+                            cfg.mrope_sections)
+            k = apply_mrope(k, positions3, cfg.rope_theta,
+                            cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    # TP when heads divide the model axis; otherwise fall back to sequence
+    # parallelism on the query axis — without this, GSPMD replicates the
+    # whole attention computation across the model axis (15-head smollm /
+    # 12-head qwen on a 16-way mesh: ~an order of magnitude wasted FLOPs).
+    mesh = shd.current_mesh()
+    model_n = mesh.shape.get("model", 1) if mesh is not None else 1
+    heads_shardable = cfg.n_heads % model_n == 0
+    if heads_shardable:
+        q = shd.act(q, ("batch", None, "heads", None))
+    elif S % model_n == 0:
+        q = shd.act(q, ("batch", "seq_sharded", None, None))
+    k = shd.act(k, ("batch", None, "kv_heads", None))
+    v = shd.act(v, ("batch", None, "kv_heads", None))
+    scale = cfg.head_dim ** -0.5
+    qg = q.reshape(B, S, KV, G, cfg.head_dim)
+
+    C = min(cfg.attn_chunk, S)
+    if S % C:
+        C = S
+    nC = S // C
+
+    if nC == 1:
+        out = _sdpa(qg, k, v, jnp.arange(S), None, causal, scale)
+    else:
+        qc = qg.reshape(B, nC, C, KV, G, cfg.head_dim)
+        qc = jnp.moveaxis(qc, 1, 0)                  # (nC, B, C, KV, G, hd)
+
+        def chunk_fn(carry, args):
+            qi, i = args
+            pos = i * C + jnp.arange(C)
+            o = _sdpa(qi, k, v, pos, None, causal, scale)
+            return carry, o
+
+        _, outs = jax.lax.scan(chunk_fn, None, (qc, jnp.arange(nC)),
+                               unroll=nC if cfg.scan_unroll else 1)
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, S, KV, G, cfg.head_dim)
+
+    out = out.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray    # (B, S_max, KV, hd)
+    v: jnp.ndarray
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, s_max: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attention_decode(cfg: ModelConfig, p, x, cache: KVCache, index,
+                     positions3=None, cross: bool = False):
+    """One-token decode. x: (B, 1, D); index: scalar position of the new
+    token. Cross-attention reads the (pre-filled) cache without updating."""
+    B = x.shape[0]
+    KV, G = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    q, k_new, v_new = _project_qkv(cfg, p, x)
+    pos = jnp.full((B, 1), index, dtype=jnp.int32)
+    if not cross:
+        if not cfg.use_rope:
+            pass
+        elif cfg.mrope and positions3 is not None:
+            q = apply_mrope(q, positions3, cfg.rope_theta,
+                            cfg.mrope_sections)
+            k_new = apply_mrope(k_new, positions3, cfg.rope_theta,
+                                cfg.mrope_sections)
+        else:
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k_new = apply_rope(k_new, pos, cfg.rope_theta)
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k_new.astype(cache.k.dtype), index, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v_new.astype(cache.v.dtype), index, axis=1)
+        cache = KVCache(k, v)
+        valid_upto = index
+    else:
+        k, v = cache.k, cache.v
+        valid_upto = None
+    qg = q.reshape(B, 1, KV, G, cfg.head_dim)
+    out = _sdpa(qg, k, v, pos[0], valid_upto, False, cfg.head_dim ** -0.5)
+    out = out.reshape(B, 1, cfg.n_heads, cfg.head_dim)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, cache

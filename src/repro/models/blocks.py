@@ -1,0 +1,192 @@
+"""Block registry: every architecture is a repeating pattern of these.
+
+Types: attn (attention+MLP), moe (attention+MoE), xattn (self+cross+MLP,
+whisper decoder), mamba, mlstm, slstm. Each type provides def/apply/decode/
+cache-init with a uniform signature so the model can scan over
+heterogeneous patterns.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm, xlstm
+from repro.models.common import rmsnorm, rmsnorm_def
+from repro.models.mlp import mlp, mlp_def
+
+
+def block_def(cfg: ModelConfig, btype: str) -> dict:
+    if btype == "attn":
+        return {"ln1": rmsnorm_def(cfg.d_model), "attn": attn.attn_def(cfg),
+                "ln2": rmsnorm_def(cfg.d_model), "mlp": mlp_def(cfg)}
+    if btype == "moe":
+        return {"ln1": rmsnorm_def(cfg.d_model), "attn": attn.attn_def(cfg),
+                "ln2": rmsnorm_def(cfg.d_model), "moe": moe_mod.moe_def(cfg)}
+    if btype == "xattn":
+        return {"ln1": rmsnorm_def(cfg.d_model), "attn": attn.attn_def(cfg),
+                "lnx": rmsnorm_def(cfg.d_model),
+                "xattn": attn.attn_def(cfg),
+                "ln2": rmsnorm_def(cfg.d_model), "mlp": mlp_def(cfg)}
+    if btype == "mamba":
+        return {"ln1": rmsnorm_def(cfg.d_model), "mamba": ssm.mamba_def(cfg)}
+    if btype == "mlstm":
+        return {"ln1": rmsnorm_def(cfg.d_model),
+                "mlstm": xlstm.mlstm_def(cfg)}
+    if btype == "slstm":
+        return {"ln1": rmsnorm_def(cfg.d_model),
+                "slstm": xlstm.slstm_def(cfg)}
+    raise ValueError(f"unknown block type {btype}")
+
+
+def block_apply(cfg: ModelConfig, btype: str, p, x, *, positions=None,
+                positions3=None, enc_out=None, causal=True):
+    """Full-sequence apply. Returns (x, aux_loss)."""
+    eps = cfg.norm_eps
+    aux = jnp.zeros((), jnp.float32)
+    if btype in ("attn", "moe", "xattn"):
+        h = attn.attention_full(cfg, p["attn"], rmsnorm(p["ln1"], x, eps),
+                                positions, causal=causal,
+                                positions3=positions3)
+        x = x + h.astype(x.dtype)
+        if btype == "xattn":
+            h = attn.attention_full(cfg, p["xattn"],
+                                    rmsnorm(p["lnx"], x, eps),
+                                    positions, causal=False, kv_x=enc_out)
+            x = x + h.astype(x.dtype)
+        if btype == "moe":
+            h, aux = moe_mod.moe_ffn(cfg, p["moe"], rmsnorm(p["ln2"], x,
+                                                            eps))
+        else:
+            h = mlp(p["mlp"], rmsnorm(p["ln2"], x, eps))
+        return x + h.astype(x.dtype), aux
+    if btype == "mamba":
+        return x + ssm.mamba_apply(cfg, p["mamba"],
+                                   rmsnorm(p["ln1"], x, eps)
+                                   ).astype(x.dtype), aux
+    if btype == "mlstm":
+        return x + xlstm.mlstm_apply(cfg, p["mlstm"],
+                                     rmsnorm(p["ln1"], x, eps)
+                                     ).astype(x.dtype), aux
+    if btype == "slstm":
+        return x + xlstm.slstm_apply(cfg, p["slstm"],
+                                     rmsnorm(p["ln1"], x, eps)
+                                     ).astype(x.dtype), aux
+    raise ValueError(btype)
+
+
+def block_cache_init(cfg: ModelConfig, btype: str, batch: int, s_max: int,
+                     dtype=jnp.bfloat16) -> Any:
+    if btype in ("attn", "moe"):
+        return {"kv": attn.init_kv_cache(cfg, batch, s_max, dtype)}
+    if btype == "xattn":
+        return {"kv": attn.init_kv_cache(cfg, batch, s_max, dtype),
+                "xkv": attn.init_kv_cache(cfg, batch, cfg.encoder_seq,
+                                          dtype)}
+    if btype == "mamba":
+        return {"state": ssm.mamba_init_cache(cfg, batch, dtype)}
+    if btype == "mlstm":
+        return {"state": xlstm.mlstm_init_cache(cfg, batch, dtype)}
+    if btype == "slstm":
+        return {"state": xlstm.slstm_init_cache(cfg, batch, dtype)}
+    raise ValueError(btype)
+
+
+def block_prefill(cfg: ModelConfig, btype: str, p, x, *, positions=None,
+                  positions3=None, enc_out=None, s_max: int = 0,
+                  cache_dtype=jnp.bfloat16):
+    """Full-sequence apply that also emits the decode cache.
+
+    For attention the (k, v) of the S prefilled positions are padded to
+    s_max; recurrent blocks emit their final state.
+    """
+    eps = cfg.norm_eps
+    S = x.shape[1]
+
+    def pad_kv(k, v):
+        pad = s_max - S
+        if pad > 0:
+            zeros = jnp.zeros((k.shape[0], pad) + k.shape[2:], cache_dtype)
+            k = jnp.concatenate([k.astype(cache_dtype), zeros], axis=1)
+            v = jnp.concatenate([v.astype(cache_dtype), zeros], axis=1)
+        return attn.KVCache(k.astype(cache_dtype), v.astype(cache_dtype))
+
+    if btype in ("attn", "moe", "xattn"):
+        h, (k, v) = attn.attention_full(cfg, p["attn"],
+                                        rmsnorm(p["ln1"], x, eps),
+                                        positions, causal=True,
+                                        positions3=positions3,
+                                        return_kv=True)
+        x = x + h.astype(x.dtype)
+        cache = {"kv": pad_kv(k, v)}
+        if btype == "xattn":
+            h, (xk, xv) = attn.attention_full(cfg, p["xattn"],
+                                              rmsnorm(p["lnx"], x, eps),
+                                              positions, causal=False,
+                                              kv_x=enc_out, return_kv=True)
+            x = x + h.astype(x.dtype)
+            cache["xkv"] = attn.KVCache(xk.astype(cache_dtype),
+                                        xv.astype(cache_dtype))
+        if btype == "moe":
+            h, _ = moe_mod.moe_ffn(cfg, p["moe"], rmsnorm(p["ln2"], x, eps))
+        else:
+            h = mlp(p["mlp"], rmsnorm(p["ln2"], x, eps))
+        return x + h.astype(x.dtype), cache
+    if btype == "mamba":
+        h, st = ssm.mamba_apply(cfg, p["mamba"], rmsnorm(p["ln1"], x, eps),
+                                return_cache=True)
+        return x + h.astype(x.dtype), {"state": st}
+    if btype == "mlstm":
+        h, st = xlstm.mlstm_apply(cfg, p["mlstm"],
+                                  rmsnorm(p["ln1"], x, eps),
+                                  return_cache=True)
+        return x + h.astype(x.dtype), {"state": st}
+    if btype == "slstm":
+        h, st = xlstm.slstm_apply(cfg, p["slstm"],
+                                  rmsnorm(p["ln1"], x, eps),
+                                  return_cache=True)
+        return x + h.astype(x.dtype), {"state": st}
+    raise ValueError(btype)
+
+
+def block_decode(cfg: ModelConfig, btype: str, p, x, cache, index, *,
+                 positions3=None):
+    """One-token decode. Returns (x, new_cache)."""
+    eps = cfg.norm_eps
+    if btype in ("attn", "moe", "xattn"):
+        h, kv = attn.attention_decode(cfg, p["attn"],
+                                      rmsnorm(p["ln1"], x, eps),
+                                      cache["kv"], index,
+                                      positions3=positions3)
+        x = x + h.astype(x.dtype)
+        new_cache = dict(cache)
+        new_cache["kv"] = kv
+        if btype == "xattn":
+            h, _ = attn.attention_decode(cfg, p["xattn"],
+                                         rmsnorm(p["lnx"], x, eps),
+                                         cache["xkv"], index, cross=True)
+            x = x + h.astype(x.dtype)
+        if btype == "moe":
+            h, _ = moe_mod.moe_ffn(cfg, p["moe"], rmsnorm(p["ln2"], x, eps))
+        else:
+            h = mlp(p["mlp"], rmsnorm(p["ln2"], x, eps))
+        return x + h.astype(x.dtype), new_cache
+    if btype == "mamba":
+        h, st = ssm.mamba_decode(cfg, p["mamba"], rmsnorm(p["ln1"], x, eps),
+                                 cache["state"])
+        return x + h.astype(x.dtype), {"state": st}
+    if btype == "mlstm":
+        h, st = xlstm.mlstm_decode(cfg, p["mlstm"],
+                                   rmsnorm(p["ln1"], x, eps),
+                                   cache["state"])
+        return x + h.astype(x.dtype), {"state": st}
+    if btype == "slstm":
+        h, st = xlstm.slstm_decode(cfg, p["slstm"],
+                                   rmsnorm(p["ln1"], x, eps),
+                                   cache["state"])
+        return x + h.astype(x.dtype), {"state": st}
+    raise ValueError(btype)

@@ -1,0 +1,159 @@
+"""Parameter definition machinery + shared layers (norms, embeddings).
+
+Params are nested dicts of arrays. Each module first builds a matching tree
+of `ParamDef` (shape + logical sharding axes + init law); `materialize`
+turns defs into arrays, `abstract` into ShapeDtypeStructs (dry-run path —
+no host allocation for 1T-parameter configs), `shardings` into
+NamedShardings via the logical rule table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import sharding as shd
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "fan_in"      # fan_in | zeros | ones | normal | embed
+    axis: int = -2            # fan-in axis for fan_in init
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical):
+            raise ValueError(f"{self.shape} vs {self.logical}")
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_one(key, d: ParamDef, dtype):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "normal":
+        return (jax.random.normal(key, d.shape) * 0.02).astype(dtype)
+    if d.init == "embed":
+        return (jax.random.normal(key, d.shape) * 1.0).astype(dtype)
+    fan_in = d.shape[d.axis] if len(d.shape) > 1 else d.shape[0]
+    scale = 1.0 / np.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, d.shape) * scale).astype(dtype)
+
+
+def materialize(defs: Tree, key, dtype=jnp.float32) -> Tree:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_one(k, d, dtype) for k, d in zip(keys, leaves)])
+
+
+def abstract(defs: Tree, dtype=jnp.float32) -> Tree:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=is_def)
+
+
+def shardings(defs: Tree, mesh) -> Tree:
+    return jax.tree.map(
+        lambda d: shd.sharding_for(mesh, d.logical, d.shape), defs,
+        is_leaf=is_def)
+
+
+def shardings_inference(defs: Tree, mesh, keep_fsdp: bool = False) -> Tree:
+    """Param shardings for serving: TP/EP axes only. FSDP sharding is a
+    *training* trade (it turns every step into a param all-gather); for
+    decode it makes the collective term the bottleneck, so unless the
+    model cannot fit per-device without it (keep_fsdp=True for the
+    1T-class configs) params replicate across data/pod."""
+    if keep_fsdp:
+        return shardings(defs, mesh)
+
+    def one(d):
+        logical = tuple(None if ax == "fsdp" else ax for ax in d.logical)
+        return shd.sharding_for(mesh, logical, d.shape)
+
+    return jax.tree.map(one, defs, is_leaf=is_def)
+
+
+def bytes_per_device(defs: Tree, mesh, dtype_bytes: int = 2,
+                     keep_fsdp: bool = False) -> int:
+    """Exact per-device param bytes under the given sharding policy."""
+    total = 0
+    shds = (shardings(defs, mesh) if keep_fsdp
+            else shardings_inference(defs, mesh, False))
+    for d, s in zip(jax.tree.leaves(defs, is_leaf=is_def),
+                    jax.tree.leaves(shds,
+                                    is_leaf=lambda x: hasattr(x, "spec"))):
+        shard = 1
+        for ax in jax.tree.leaves(tuple(s.spec)):
+            if ax is not None:
+                shard *= mesh.shape[ax]
+        total += int(np.prod(d.shape)) * dtype_bytes // max(1, shard)
+    return total
+
+
+def specs(defs: Tree, mesh) -> Tree:
+    return jax.tree.map(
+        lambda d: shd.spec_for(mesh, d.logical, d.shape), defs,
+        is_leaf=is_def)
+
+
+def n_params(defs: Tree) -> int:
+    return sum(int(np.prod(d.shape))
+               for d in jax.tree.leaves(defs, is_leaf=is_def))
+
+
+# -----------------------------------------------------------------------
+# layers
+# -----------------------------------------------------------------------
+
+def rmsnorm_def(dim: int) -> Tree:
+    return {"scale": ParamDef((dim,), ("embed",), init="ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_def(dim: int) -> Tree:
+    return {"scale": ParamDef((dim,), ("embed",), init="ones"),
+            "bias": ParamDef((dim,), ("embed",), init="zeros")}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def embed_def(vocab: int, dim: int) -> Tree:
+    return {"tokens": ParamDef((vocab, dim), ("vocab", "fsdp"),
+                               init="embed")}
+
+
+def embed(p, ids):
+    return jnp.take(p["tokens"], ids, axis=0)
+
+
+def unembed(p, x):
+    """Logits in f32 (vocab sharded over model)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      p["tokens"].astype(jnp.float32))
+
+
+def swiglu(x_gate, x_up):
+    return jax.nn.silu(x_gate) * x_up

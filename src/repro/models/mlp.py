@@ -1,0 +1,25 @@
+"""Dense SwiGLU MLP (TP-sharded on the hidden axis)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import sharding as shd
+from repro.models.common import ParamDef, swiglu
+
+
+def mlp_def(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    return {
+        "w_gate": ParamDef((D, F), ("fsdp", "mlp")),
+        "w_up": ParamDef((D, F), ("fsdp", "mlp")),
+        "w_down": ParamDef((F, D), ("mlp", "fsdp")),
+    }
+
+
+def mlp(p, x):
+    h = swiglu(jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype)),
+               jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype)))
+    h = shd.act(h, ("batch", None, "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))

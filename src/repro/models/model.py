@@ -1,0 +1,262 @@
+"""Model assembly: embedding → scanned block stack → norm → logits.
+
+The depth dimension is a lax.scan over `n_repeats` copies of the block
+pattern (params stacked per pattern position), optionally rematerialized —
+HLO size is independent of depth, which keeps 61-80 layer × 512-device
+dry-run compiles tractable. Forward (train), prefill (build cache), and
+decode (one token) all share the same scan skeleton.
+
+Families: dense/moe/ssm/hybrid decoder-only LMs; vlm (stub patch-embedding
+prefix + M-RoPE positions); audio (whisper-style encoder-decoder with stub
+frame embeddings).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as blk
+from repro.models import sharding as shd
+from repro.models.common import (ParamDef, embed, embed_def, is_def,
+                                 rmsnorm, rmsnorm_def, unembed)
+
+Tree = Any
+
+
+def _stack_defs(defs: Tree, n: int) -> Tree:
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.logical,
+                           init=d.init, axis=d.axis),
+        defs, is_leaf=is_def)
+
+
+def model_def(cfg: ModelConfig) -> Tree:
+    d: dict = {"embed": embed_def(cfg.padded_vocab, cfg.d_model),
+               "final_norm": rmsnorm_def(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        d["unembed"] = {"tokens": ParamDef(
+            (cfg.padded_vocab, cfg.d_model), ("vocab", "fsdp"),
+            init="normal")}
+    for pos, btype in enumerate(cfg.block_pattern):
+        bt = "xattn" if (cfg.is_encdec and btype == "attn") else btype
+        d[f"blocks_{pos}"] = _stack_defs(blk.block_def(cfg, bt),
+                                         cfg.n_repeats)
+    if cfg.is_encdec:
+        d["enc_blocks"] = _stack_defs(blk.block_def(cfg, "attn"),
+                                      cfg.encoder_layers)
+        d["enc_norm"] = rmsnorm_def(cfg.d_model)
+    return d
+
+
+def _sinusoidal(S: int, D: int, dtype) -> jnp.ndarray:
+    pos = np.arange(S)[:, None]
+    i = np.arange(D // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / D)
+    table = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(table, dtype)
+
+
+def _repeat_params(params, pattern):
+    return {pos: params[f"blocks_{pos}"] for pos in range(len(pattern))}
+
+
+def _scan_stack(cfg: ModelConfig, params, x, step_fn, cache=None):
+    """Scan `step_fn(x, rep_params[, rep_cache])` over n_repeats."""
+    rep_params = _repeat_params(params, cfg.block_pattern)
+    body = step_fn
+    if cfg.remat and cache is None:      # decode carries caches; no remat
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if cfg.remat_policy == "nothing" else
+                  jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        body = jax.checkpoint(body, policy=policy)
+    unroll = cfg.n_repeats if cfg.scan_unroll else 1
+    if cache is None:
+        (x, aux), ys = jax.lax.scan(
+            lambda carry, p: body(carry, p),
+            (x, jnp.zeros((), jnp.float32)), rep_params, unroll=unroll)
+        return x, aux, ys
+    (x, aux), new_cache = jax.lax.scan(
+        lambda carry, pc: body(carry, pc),
+        (x, jnp.zeros((), jnp.float32)), (rep_params, cache),
+        unroll=unroll)
+    return x, aux, new_cache
+
+
+def _encoder(cfg: ModelConfig, params, frames):
+    """Whisper-style encoder over stub frame embeddings (B, S_enc, D)."""
+    B, S, D = frames.shape
+    x = frames + _sinusoidal(S, D, frames.dtype)[None]
+    x = shd.act(x, ("batch", None, None))
+    positions = jnp.arange(S)[None, :]
+
+    def step(carry, p):
+        x, aux = carry
+        x, a = blk.block_apply(cfg, "attn", p, x, positions=positions,
+                               causal=False)
+        return (x, aux + a), 0.0
+
+    rep = params["enc_blocks"]
+    body = jax.checkpoint(step) if cfg.remat else step
+    (x, _), _ = jax.lax.scan(
+        lambda c, p: body(c, p), (x, jnp.zeros((), jnp.float32)), rep,
+        unroll=cfg.encoder_layers if cfg.scan_unroll else 1)
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _embed_inputs(cfg: ModelConfig, params, batch):
+    """Token / multimodal embedding. Returns x, positions, positions3."""
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens).astype(
+        jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    positions3 = batch.get("positions3")
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x],
+                            axis=1)
+    if not cfg.use_rope:
+        x = x + _sinusoidal(x.shape[1], cfg.d_model, x.dtype)[None]
+    positions = jnp.arange(x.shape[1])[None, :]
+    x = shd.act(x, ("batch", None, None))
+    return x, positions, positions3
+
+
+def forward_hidden(cfg: ModelConfig, params, batch) -> tuple[jnp.ndarray,
+                                                             jnp.ndarray]:
+    """Forward up to the final norm: returns (hidden (B,S,D), aux_loss)."""
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = _encoder(cfg, params, batch["frames"])
+    x, positions, positions3 = _embed_inputs(cfg, params, batch)
+
+    def step(carry, p):
+        x, aux = carry
+        for pos, btype in enumerate(cfg.block_pattern):
+            bt = "xattn" if (cfg.is_encdec and btype == "attn") else btype
+            x, a = blk.block_apply(cfg, bt, p[pos], x, positions=positions,
+                                   positions3=positions3, enc_out=enc_out)
+            aux = aux + a
+        return (x, aux), 0.0
+
+    x, aux, _ = _scan_stack(cfg, params, x, step)
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+def unembed_params(cfg: ModelConfig, params):
+    return params["embed"] if cfg.tie_embeddings else params["unembed"]
+
+
+def forward(cfg: ModelConfig, params, batch) -> tuple[jnp.ndarray,
+                                                      jnp.ndarray]:
+    """Training/scoring forward: returns (logits f32, aux_loss)."""
+    x, aux = forward_hidden(cfg, params, batch)
+    logits = unembed(unembed_params(cfg, params), x)
+    logits = shd.act(logits, ("batch", None, "vocab"))
+    return logits, aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int,
+               dtype=jnp.bfloat16) -> Tree:
+    """Stacked (n_repeats leading axis) decode caches per pattern pos."""
+    caches = {}
+    for pos, btype in enumerate(cfg.block_pattern):
+        bt = "xattn" if (cfg.is_encdec and btype == "attn") else btype
+        one = blk.block_cache_init(cfg, bt, batch, s_max, dtype)
+        caches[pos] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_repeats,) + a.shape),
+            one)
+    return caches
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, s_max: int,
+                   dtype=jnp.bfloat16) -> Tree:
+    """ShapeDtypeStruct cache (dry-run input spec — no allocation)."""
+    caches = {}
+    for pos, btype in enumerate(cfg.block_pattern):
+        bt = "xattn" if (cfg.is_encdec and btype == "attn") else btype
+        one = blk.block_cache_init(cfg, bt, 1, s_max, dtype)
+        caches[pos] = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(
+                (cfg.n_repeats, batch) + a.shape[1:], a.dtype), one)
+    return caches
+
+
+def prefill(cfg: ModelConfig, params, batch, s_max: int,
+            cache_dtype=jnp.bfloat16):
+    """Run the full prompt; returns (last-position logits, cache)."""
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = _encoder(cfg, params, batch["frames"])
+    x, positions, positions3 = _embed_inputs(cfg, params, batch)
+
+    def step(carry, p):
+        x, aux = carry
+        caches = {}
+        for pos, btype in enumerate(cfg.block_pattern):
+            bt = "xattn" if (cfg.is_encdec and btype == "attn") else btype
+            x, c = blk.block_prefill(cfg, bt, p[pos], x,
+                                     positions=positions,
+                                     positions3=positions3,
+                                     enc_out=enc_out, s_max=s_max,
+                                     cache_dtype=cache_dtype)
+            caches[pos] = c
+        return (x, aux), caches
+
+    x, _, caches = _scan_stack(cfg, params, x, step)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    emb = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(emb, x[:, -1:])
+    return logits[:, 0, :cfg.vocab_size], caches
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, index,
+                positions3=None):
+    """One-token serve step. tokens: (B, 1). Returns (logits, new cache)."""
+    x = embed(params["embed"], tokens).astype(
+        jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    if not cfg.use_rope:                  # absolute position at `index`
+        D = cfg.d_model
+        i = jnp.arange(D // 2, dtype=jnp.float32)
+        ang = jnp.asarray(index, jnp.float32) / jnp.power(
+            10000.0, 2 * i / D)
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+        x = x + pe[None, None, :].astype(x.dtype)
+    x = shd.act(x, ("batch", None, None))
+
+    def step(carry, pc):
+        x, aux = carry
+        p, cache_r = pc
+        new_caches = {}
+        for pos, btype in enumerate(cfg.block_pattern):
+            bt = "xattn" if (cfg.is_encdec and btype == "attn") else btype
+            x, c = blk.block_decode(cfg, bt, p[pos], x, cache_r[pos], index,
+                                    positions3=positions3)
+            new_caches[pos] = c
+        return (x, aux), new_caches
+
+    x, _, new_cache = _scan_stack(cfg, params, x, step, cache=cache)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    emb = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(emb, x)
+    logits = shd.act(logits, ("batch", None, "vocab"))
+    # drop vocab padding at the (tiny) decode output
+    return logits[:, 0, :cfg.vocab_size], new_cache
+
+
+def count_params(cfg: ModelConfig) -> int:
+    from repro.models.common import n_params
+    return n_params(model_def(cfg))
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Active per-token parameters (MoE: only routed experts count)."""
+    total = count_params(cfg)
+    if cfg.n_experts == 0:
+        return total
+    expert_params = 3 * cfg.d_model * cfg.d_expert     # gate/up/down
+    inactive = (cfg.n_experts - cfg.experts_per_token) * expert_params
+    n_moe_layers = sum(1 for b in cfg.layer_types() if b == "moe")
+    return total - n_moe_layers * inactive

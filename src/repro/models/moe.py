@@ -1,0 +1,158 @@
+"""Mixture-of-Experts with ALTO-linearized sorted dispatch.
+
+This is where the paper's technique is a first-class feature of the LM
+stack: the (token, expert) routing assignment is a sparse rank-2 tensor,
+and we dispatch it exactly the way ALTO executes an output-oriented
+traversal (paper §4.2):
+
+  1. linearize each routing pair to a single integer key with the expert
+     bits above the token bits (expert-major — the "output mode" here is
+     the expert, since the conflicting resource is the per-expert buffer);
+  2. sort by the linearized key (one radix-friendly 1-D sort instead of a
+     2-D lexsort — same argument as paper Fig. 13's generation-cost win);
+  3. runs of equal expert id become contiguous segments; each token's slot
+     is its rank within the segment (the balanced-partition capacity
+     bucket), conflict-free by construction.
+
+Experts are EP-sharded over the model axis; the scatter/gather between the
+token-sharded and expert-sharded layouts is GSPMD's all-to-all. Tokens past
+an expert's capacity are dropped (weight renormalized), standard for
+capacity-bucketed MoE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import sharding as shd
+from repro.models.common import ParamDef, swiglu
+
+
+def moe_def(cfg: ModelConfig) -> dict:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.d_expert
+    # EP axis choice: "model" (default) or "data" (weights fully resident,
+    # token all-to-all — the right trade for 1T-class expert stacks where
+    # FSDP would re-gather expert weights every microbatch). The hidden
+    # (F) axis also maps to model so MoE compute shards even when the
+    # expert count is indivisible (granite's 40 experts on a 16-way axis).
+    ep = "expert_dp" if cfg.moe_ep_axis == "data" else "expert"
+    return {
+        "router": ParamDef((D, E), ("fsdp", None)),
+        "w_gate": ParamDef((E, D, F), (ep, "fsdp", "mlp"), axis=-2),
+        "w_up": ParamDef((E, D, F), (ep, "fsdp", "mlp"), axis=-2),
+        "w_down": ParamDef((E, F, D), (ep, "mlp", "fsdp"), axis=-2),
+    }
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(cfg.experts_per_token * n_tokens / cfg.n_experts
+            * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)          # pad to sublane multiple
+
+
+def _alto_sort_dispatch(expert_ids, n_experts, n_tokens):
+    """ALTO-style linearized sort of (expert, token) pairs.
+
+    expert_ids: (T*k,) int32. Returns (order, slot, seg_expert) where
+    `order` sorts pairs expert-major, `slot` is the rank of each sorted
+    pair within its expert segment (capacity bucket index).
+    """
+    tk = expert_ids.shape[0]
+    pair_bits = max(1, (tk - 1).bit_length())
+    if pair_bits + max(1, (n_experts - 1).bit_length()) > 32:
+        raise ValueError("linearized routing key exceeds 32 bits")
+    # bit-level gather: expert bits above pair-index bits — one linear key
+    key = (expert_ids.astype(jnp.uint32) << pair_bits) | jnp.arange(
+        tk, dtype=jnp.uint32)
+    order = jnp.argsort(key)                       # expert-major run order
+    sorted_e = jnp.take(expert_ids, order)
+    # rank within segment: position minus index of the segment start
+    idx = jnp.arange(tk)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_e[1:] != sorted_e[:-1]])
+    seg_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, idx, 0))
+    slot = idx - seg_start
+    return order, slot, sorted_e
+
+
+def _dispatch_row(cfg: ModelConfig, x_row, top_e, top_p, C: int,
+                  alto: bool):
+    """Per-batch-row dispatch/combine index computation.
+
+    x_row: (S, D); top_e/top_p: (S, K). Returns (buf (E,C,D) one-hot
+    scattered inputs, combine indices). Runs under vmap over the batch
+    dim, so the ALTO sort is LOCAL to each data shard — the cross-device
+    movement is only the (batch → expert)-sharded einsum that GSPMD lowers
+    to an all-to-all, never a replicated global sort.
+    """
+    S, D = x_row.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    flat_e = top_e.reshape(-1).astype(jnp.int32)          # (S*K,)
+    flat_w = top_p.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)
+
+    if alto:
+        order, slot, seg_e = _alto_sort_dispatch(flat_e, E, S)
+        tok = jnp.take(flat_t, order)
+        w = jnp.take(flat_w, order)
+        e = seg_e
+    else:  # reference path: per-expert cumulative counts without sorting
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+        slot = (jnp.cumsum(onehot, axis=0) - 1)[
+            jnp.arange(flat_e.shape[0]), flat_e]
+        tok, w, e = flat_t, flat_w, flat_e
+
+    keep = slot < C
+    slot_c = jnp.where(keep, slot, 0)
+    buf = jnp.zeros((E, C, D), x_row.dtype)
+    upd = jnp.where(keep[:, None], jnp.take(x_row, tok, axis=0), 0.0)
+    buf = buf.at[e, slot_c].add(upd.astype(x_row.dtype))
+    return buf, (tok, w, e, slot_c, keep)
+
+
+def _combine_row(y_row, idx, S: int):
+    """y_row: (E, C, D) expert outputs -> (S, D) weighted combine."""
+    tok, w, e, slot_c, keep = idx
+    D = y_row.shape[-1]
+    out_rows = y_row[e, slot_c] * (w * keep)[:, None].astype(y_row.dtype)
+    return jnp.zeros((S, D), y_row.dtype).at[tok].add(out_rows)
+
+
+def moe_ffn(cfg: ModelConfig, p, x, rngs=None):
+    """x: (B, S, D) -> (B, S, D), plus router aux loss (load balancing)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)               # (B, S, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # load-balancing aux loss (Switch): E * <f_e, p_e>
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    C = _capacity(cfg, S)                                 # per-row buckets
+    buf, idx = jax.vmap(
+        lambda xr, te, tp: _dispatch_row(cfg, xr, te, tp, C,
+                                         cfg.moe_alto_dispatch))(
+        x, top_e, top_p)                                  # (B, E, C, D)
+    ep = "expert_dp" if cfg.moe_ep_axis == "data" else "expert"
+    buf_spec = ((None, ep, None, None) if ep == "expert_dp"
+                else ("batch", ep, None, None))           # a2a over data
+    buf = shd.act(buf, buf_spec)
+
+    h = swiglu(
+        jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(x.dtype)),
+        jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(x.dtype)))
+    h = shd.act(h, buf_spec[:3] + ("mlp",))
+    y = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(x.dtype))
+    y = shd.act(y, buf_spec)
+
+    out = jax.vmap(lambda yr, ix: _combine_row(yr, ix, S))(y, idx)
+    return out, aux

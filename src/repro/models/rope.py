@@ -1,0 +1,55 @@
+"""Rotary position embeddings: standard RoPE and multi-axis M-RoPE.
+
+M-RoPE (qwen2-vl): the head_dim/2 frequency slots are split into sections
+(temporal, height, width); each section rotates with its own position
+stream. Text tokens carry identical t/h/w positions, so M-RoPE degenerates
+to RoPE on text — the stub vision frontend supplies 3-D positions for the
+patch-embedding prefix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: tuple[int, ...]) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions3: (3, B, S) int32 (t, h, w streams).
+
+    sections sum to hd/2; frequency slot j uses the position stream of the
+    section containing j (Qwen2-VL §2.1).
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    # stream id per frequency slot
+    stream = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.asarray(sections), total_repeat_length=hd // 2)
+    pos = positions3.astype(jnp.float32)                 # (3, B, S)
+    pos_per_slot = jnp.take(pos, stream, axis=0)         # (hd/2, B, S)
+    ang = jnp.transpose(pos_per_slot, (1, 2, 0)) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,134 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+Params and activations are annotated with *logical* axis names; a rule table
+maps them to mesh axes. Any mapping whose dimension size is not divisible by
+the mesh-axis product is dropped (e.g. 8 KV heads cannot shard over a
+16-way model axis → replicated), so one rule table serves every
+architecture × mesh combination.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axes (in priority order)
+RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),       # DP
+    "fsdp": ("pod", "data"),        # param/optimizer ZeRO-3 axis
+    "heads": ("model",),            # TP
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "expert": ("model",),           # EP over the TP axis
+    "expert_dp": ("data",),         # EP over the data axis (weights stay
+                                    # put; token all-to-all — 1T-class MoE)
+    "vocab": ("model",),
+    "seq_sharded": ("model",),      # SP for long-context KV caches
+    "seq_full": ("data", "model"),  # SP when batch cannot shard (B=1)
+    # unsharded logicals
+    "layers": (), "seq": (), "embed_act": (), "head_dim": (), "state": (),
+    "embed": (), "conv": (), "capacity": (), "any": (),
+}
+
+
+def _mesh_axes(mesh: Mesh, names: tuple[str, ...]) -> tuple[str, ...]:
+    return tuple(n for n in names if n in mesh.shape)
+
+
+def spec_for(mesh: Mesh, logical: Sequence[str | None],
+             dims: Sequence[int] | None = None) -> P:
+    """PartitionSpec for logical axes, dropping non-divisible mappings and
+    deduplicating mesh axes across dims (first dim wins)."""
+    out = []
+    used: set[str] = set()
+    for i, name in enumerate(logical):
+        if name is None:
+            out.append(None)
+            continue
+        axes = tuple(a for a in _mesh_axes(mesh, RULES.get(name, ()))
+                     if a not in used)
+        if not axes:
+            out.append(None)
+            continue
+        size = dims[i] if dims is not None else None
+        if size is not None:
+            shard = 1
+            for a in axes:
+                shard *= mesh.shape[a]
+            if size % shard:
+                # try progressively fewer axes (suffix first)
+                ok = None
+                for k in range(len(axes) - 1, 0, -1):
+                    s = 1
+                    for a in axes[:k]:
+                        s *= mesh.shape[a]
+                    if size % s == 0:
+                        ok = axes[:k]
+                        break
+                axes = ok or ()
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+            used.add(axes[0])
+        else:
+            out.append(tuple(axes))
+            used.update(axes)
+    return P(*out)
+
+
+def sharding_for(mesh: Mesh, logical: Sequence[str | None],
+                 dims: Sequence[int] | None = None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(mesh, logical, dims))
+
+
+def constrain(x, mesh: Mesh, logical: Sequence[str | None]):
+    """with_sharding_constraint by logical names (activations)."""
+    return jax.lax.with_sharding_constraint(
+        x, sharding_for(mesh, logical, x.shape))
+
+
+_MESH_CTX: list[Mesh | None] = [None]
+
+
+class use_mesh:
+    """Context manager: activation constraints apply under this mesh.
+
+    Model code calls `act(x, logical)` unconditionally; without an active
+    mesh (CPU smoke tests) it is a no-op, under the production mesh it
+    becomes with_sharding_constraint — same model code for both paths.
+    """
+
+    def __init__(self, mesh: Mesh | None):
+        self.mesh = mesh
+
+    def __enter__(self):
+        _MESH_CTX.append(self.mesh)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        _MESH_CTX.pop()
+
+
+def current_mesh() -> Mesh | None:
+    return _MESH_CTX[-1]
+
+
+def act(x, logical: Sequence[str | None]):
+    """Constrain an activation by logical axes (no-op without a mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, sharding_for(mesh, logical, x.shape))
+
+
+def tree_shardings(mesh: Mesh, logical_tree, shape_tree):
+    """Map a pytree of logical-axis tuples + shapes -> NamedShardings."""
+    return jax.tree.map(
+        lambda log, shp: sharding_for(mesh, log, shp.shape),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,228 @@
+"""State-space / linear-recurrence substrate.
+
+`ssd_chunked` is the shared chunked-scan core (Mamba2's SSD algorithm):
+within a chunk the recurrence is computed in a parallel attention-like
+form; across chunks a lax.scan carries the (H, N, P) state. Both Mamba2
+blocks (zamba2) and mLSTM cells (xlstm) lower onto this core — an mLSTM is
+the same recurrence with a = log f, B = k, X = i·v, C = q.
+
+Decode is the O(1) per-token state update, which is what makes the
+long_500k cell runnable for the ssm/hybrid architectures.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import sharding as shd
+from repro.models.common import ParamDef, rmsnorm
+
+
+def ssd_chunked(a, Bm, X, Cm, chunk: int, unroll: bool = False):
+    """Chunked linear recurrence  h_t = exp(a_t)·h_{t-1} + B_t ⊗ X_t,
+    y_t = C_t · h_t.
+
+    a:  (B, S, H)      log-decay per step
+    Bm: (B, S, H, N)   input maps (broadcast H=1 allowed)
+    X:  (B, S, H, P)   inputs
+    Cm: (B, S, H, N)   output maps (broadcast H=1 allowed)
+    Returns y (B, S, H, P), final state (B, H, N, P).
+    """
+    Bsz, S, H = a.shape
+    N = Bm.shape[-1]
+    P = X.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+
+    G = Bm.shape[2]
+    hpg = H // G                                        # heads per group
+    af = a.astype(jnp.float32).reshape(Bsz, nc, Q, H)
+    # expand group maps to per-head (a broadcast XLA fuses, G==H is a no-op)
+    Bh = jnp.repeat(Bm.reshape(Bsz, nc, Q, G, N), hpg,
+                    axis=3).astype(jnp.float32)          # (B,nc,Q,H,N)
+    Ch = jnp.repeat(Cm.reshape(Bsz, nc, Q, G, N), hpg,
+                    axis=3).astype(jnp.float32)
+    Xc = X.astype(jnp.float32).reshape(Bsz, nc, Q, H, P)
+
+    cum = jnp.cumsum(af, axis=2)                       # (B,nc,Q,H)
+    total = cum[:, :, -1:, :]                          # (B,nc,1,H)
+
+    # --- intra-chunk (parallel attention-like form) ---
+    # L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Ch, Bh)    # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores * L, Xc)
+
+    # --- chunk states ---
+    decay_state = jnp.exp(total - cum)                  # (B,nc,Q,H)
+    BX = jnp.einsum("bcjhn,bcjh,bcjhp->bchnp", Bh, decay_state, Xc)
+
+    chunk_decay = jnp.exp(total[:, :, 0, :])            # (B,nc,H)
+
+    def scan_fn(h, args):
+        bx, dec = args
+        h_prev = h
+        h = h * dec[:, :, None, None] + bx
+        return h, h_prev
+
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    hT, h_prevs = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(BX, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+        unroll=nc if unroll else 1)
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)               # (B,nc,H,N,P)
+
+    # --- inter-chunk contribution ---
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp", Ch, h_prevs)
+    y_inter = y_inter * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y.astype(X.dtype), hT
+
+
+def ssd_step(h, a, Bm, X, Cm):
+    """Single-token recurrence step. h: (B,H,N,P); a: (B,H);
+    Bm/Cm: (B,G,N); X: (B,H,P). Returns y (B,H,P), new h."""
+    G = Bm.shape[1]
+    hpg = h.shape[1] // G
+    Bfull = jnp.repeat(Bm, hpg, axis=1)                 # (B,H,N)
+    Cfull = jnp.repeat(Cm, hpg, axis=1)
+    h = h * jnp.exp(a.astype(jnp.float32))[:, :, None, None] \
+        + Bfull[..., None].astype(jnp.float32) * X[:, :, None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", Cfull.astype(jnp.float32), h)
+    return y.astype(X.dtype), h
+
+
+# -----------------------------------------------------------------------
+# Mamba2 block
+# -----------------------------------------------------------------------
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray    # (B, W-1, H, P + 2N/H… flattened conv channels)
+    h: jnp.ndarray       # (B, H, N, P)
+
+
+def mamba_def(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    P = cfg.ssm_head_dim
+    H = (2 * D) // P                   # expand factor 2
+    N = cfg.ssm_state
+    W = cfg.conv_width
+    return {
+        "wz": ParamDef((D, H, P), ("fsdp", "heads", None)),
+        "wx": ParamDef((D, H, P), ("fsdp", "heads", None)),
+        "wB": ParamDef((D, N), ("fsdp", None)),
+        "wC": ParamDef((D, N), ("fsdp", None)),
+        "wdt": ParamDef((D, H), ("fsdp", "heads")),
+        "dt_bias": ParamDef((H,), ("heads",), init="zeros"),
+        "a_log": ParamDef((H,), ("heads",), init="zeros"),
+        "skip": ParamDef((H,), ("heads",), init="ones"),
+        "conv_x": ParamDef((W, H, P), (None, "heads", None), init="normal"),
+        "conv_B": ParamDef((W, N), (None, None), init="normal"),
+        "conv_C": ParamDef((W, N), (None, None), init="normal"),
+        "norm": ParamDef((H, P), ("heads", None), init="ones"),
+        "wo": ParamDef((H, P, D), ("heads", None, "fsdp"), axis=-3),
+    }
+
+
+def _causal_conv(x, w, cache=None):
+    """Depthwise causal conv along seq. x: (B,S,...C), w: (W,...C)."""
+    W = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], W - 1) + x.shape[2:], x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(W))
+    new_cache = xp[:, -(W - 1):] if W > 1 else pad
+    return jax.nn.silu(out), new_cache
+
+
+def mamba_apply(cfg: ModelConfig, p, x, return_cache: bool = False):
+    """x: (B, S, D) -> (B, S, D). Training / prefill path."""
+    B_, S, D = x.shape
+    P, N = cfg.ssm_head_dim, cfg.ssm_state
+    W = cfg.conv_width
+    H = (2 * D) // P
+    z = jnp.einsum("bsd,dhp->bshp", x, p["wz"].astype(x.dtype))
+    xs0 = jnp.einsum("bsd,dhp->bshp", x, p["wx"].astype(x.dtype))
+    Bm0 = jnp.einsum("bsd,dn->bsn", x, p["wB"].astype(x.dtype))
+    Cm0 = jnp.einsum("bsd,dn->bsn", x, p["wC"].astype(x.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(x.dtype))
+    xs, _ = _causal_conv(xs0, p["conv_x"])
+    Bm, _ = _causal_conv(Bm0, p["conv_B"])
+    Cm, _ = _causal_conv(Cm0, p["conv_C"])
+    xs = shd.act(xs, ("batch", None, "heads", None))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))        # (H,) negative
+    a = dt * A[None, None, :]                            # (B,S,H) log decay
+    X = xs.astype(jnp.float32) * dt[..., None]
+    y, hT = ssd_chunked(a, Bm[:, :, None, :], X, Cm[:, :, None, :],
+                        cfg.ssm_chunk, unroll=cfg.scan_unroll)
+    y = y + xs * p["skip"].astype(x.dtype)[None, None, :, None]
+    y = rmsnorm({"scale": p["norm"].reshape(-1)},
+                y.reshape(B_, S, H * P)).reshape(B_, S, H, P)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bshp,hpd->bsd", y, p["wo"].astype(x.dtype))
+    if not return_cache:
+        return out
+    # conv cache: last W-1 *pre-conv* channel values, matching decode layout
+    tail = jnp.concatenate(
+        [xs0.reshape(B_, S, H * P), Bm0, Cm0], axis=-1)[:, -(W - 1):]
+    return out, MambaCache(conv=tail.astype(jnp.bfloat16), h=hT)
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    D = cfg.d_model
+    P, N, W = cfg.ssm_head_dim, cfg.ssm_state, cfg.conv_width
+    H = (2 * D) // P
+    return MambaCache(
+        conv=jnp.zeros((batch, W - 1, H * P + 2 * N), dtype),
+        h=jnp.zeros((batch, H, N, P), jnp.float32))
+
+
+def mamba_decode(cfg: ModelConfig, p, x, cache: MambaCache):
+    """x: (B, 1, D) one token. Returns y (B,1,D), new cache."""
+    B_, _, D = x.shape
+    P, N, W = cfg.ssm_head_dim, cfg.ssm_state, cfg.conv_width
+    H = (2 * D) // P
+    z = jnp.einsum("bsd,dhp->bshp", x, p["wz"].astype(x.dtype))
+    xs = jnp.einsum("bsd,dhp->bshp", x, p["wx"].astype(x.dtype))
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["wB"].astype(x.dtype))
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["wC"].astype(x.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(x.dtype))
+
+    conv_in = jnp.concatenate(
+        [xs.reshape(B_, 1, H * P), Bm, Cm], axis=-1)     # (B,1,HP+2N)
+    xp = jnp.concatenate([cache.conv.astype(x.dtype), conv_in], axis=1)
+    w_full = jnp.concatenate(
+        [p["conv_x"].reshape(W, H * P), p["conv_B"], p["conv_C"]], axis=-1)
+    conv_out = jnp.einsum("bwc,wc->bc", xp, w_full.astype(x.dtype))
+    conv_out = jax.nn.silu(conv_out)
+    xs = conv_out[:, :H * P].reshape(B_, H, P)
+    Bm = conv_out[:, H * P:H * P + N].reshape(B_, 1, N)
+    Cm = conv_out[:, H * P + N:].reshape(B_, 1, N)
+    new_conv = xp[:, 1:]
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    a = dt * A[None, :]
+    X = xs.astype(jnp.float32) * dt[..., None]
+    y, h = ssd_step(cache.h, a, Bm, X, Cm)               # (B,H,P)
+    y = y + xs * p["skip"].astype(x.dtype)[None, :, None]
+    y = rmsnorm({"scale": p["norm"].reshape(-1)},
+                y.reshape(B_, 1, H * P)).reshape(B_, H, P)
+    y = y * jax.nn.silu(z[:, 0])
+    out = jnp.einsum("bhp,hpd->bd", y, p["wo"].astype(x.dtype))
+    return out[:, None, :], MambaCache(conv=new_conv.astype(cache.conv.dtype),
+                                       h=h)

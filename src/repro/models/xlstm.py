@@ -1,0 +1,224 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM's recurrence C_t = f_t·C_{t-1} + i_t·(v_t k_tᵀ), y_t = (C_t q_t) / nrm
+maps directly onto the shared SSD core (ssm.ssd_chunked) with a = log f,
+B = k, X = i·v, C = q; the normalizer n_t = f_t·n_{t-1} + i_t·k_t is the
+same recurrence with P=1. Gates use sigmoid forget / sigmoid input (the
+stabilized-exponential variant of the paper is noted as a simplification in
+DESIGN.md — the recurrence structure and state shapes are identical).
+
+sLSTM is inherently sequential (the paper's CUDA kernel is a fused
+recurrence); here it is a lax.scan over time with per-head block-diagonal
+recurrent weights and exponential-gate stabilization (m state).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import sharding as shd
+from repro.models.common import ParamDef, rmsnorm
+from repro.models.ssm import ssd_chunked, ssd_step
+
+
+# -----------------------------------------------------------------------
+# mLSTM
+# -----------------------------------------------------------------------
+
+class MlstmCache(NamedTuple):
+    c: jnp.ndarray    # (B, H, N, P) matrix memory
+    n: jnp.ndarray    # (B, H, N) normalizer
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    D = cfg.d_model
+    d_inner = int(cfg.mlstm_proj_factor * D)
+    H = cfg.n_heads
+    P = d_inner // H
+    N = max(8, P // 2)                  # qk dim factor 0.5
+    return D, d_inner, H, P, N
+
+
+def mlstm_def(cfg: ModelConfig) -> dict:
+    D, d_inner, H, P, N = _mlstm_dims(cfg)
+    return {
+        "w_up": ParamDef((D, H, P), ("fsdp", "heads", None)),
+        "w_gate": ParamDef((D, H, P), ("fsdp", "heads", None)),
+        "wq": ParamDef((D, H, N), ("fsdp", "heads", None)),
+        "wk": ParamDef((D, H, N), ("fsdp", "heads", None)),
+        "wi": ParamDef((D, H), ("fsdp", "heads")),
+        "wf": ParamDef((D, H), ("fsdp", "heads")),
+        "f_bias": ParamDef((H,), ("heads",), init="ones"),
+        "norm": ParamDef((H, P), ("heads", None), init="ones"),
+        "w_down": ParamDef((H, P, D), ("heads", None, "fsdp"), axis=-3),
+    }
+
+
+def _mlstm_gates(p, x):
+    # TP: xlstm has only 4 heads, so the model axis shards the qk (N) and
+    # value (P) feature dims instead — without this the whole mLSTM cell
+    # would be replicated across the model axis.
+    v = jnp.einsum("bsd,dhp->bshp", x, p["w_up"].astype(x.dtype))
+    v = shd.act(v, ("batch", None, None, "mlp"))
+    z = jnp.einsum("bsd,dhp->bshp", x, p["w_gate"].astype(x.dtype))
+    z = shd.act(z, ("batch", None, None, "mlp"))
+    q = jnp.einsum("bsd,dhn->bshn", x, p["wq"].astype(x.dtype))
+    q = shd.act(q, ("batch", None, None, "mlp"))
+    k = jnp.einsum("bsd,dhn->bshn", x, p["wk"].astype(x.dtype))
+    k = shd.act(k, ("batch", None, None, "mlp"))
+    i_raw = jnp.einsum("bsd,dh->bsh", x, p["wi"].astype(x.dtype))
+    f_raw = jnp.einsum("bsd,dh->bsh", x, p["wf"].astype(x.dtype)) \
+        + p["f_bias"].astype(x.dtype)
+    i_g = jax.nn.sigmoid(i_raw.astype(jnp.float32))
+    log_f = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    return v, z, q, k, i_g, log_f
+
+
+def mlstm_apply(cfg: ModelConfig, p, x, return_cache: bool = False):
+    B_, S, D = x.shape
+    _, d_inner, H, P, N = _mlstm_dims(cfg)
+    v, z, q, k, i_g, log_f = _mlstm_gates(p, x)
+    scale = N ** -0.5
+    X = v.astype(jnp.float32) * i_g[..., None]
+    y, cT = ssd_chunked(log_f, k * scale, X, q, cfg.ssm_chunk,
+                        unroll=cfg.scan_unroll)
+    # normalizer: same recurrence with X = i (P=1)
+    ones = i_g[..., None]
+    nrm, nT = ssd_chunked(log_f, k * scale, ones, q, cfg.ssm_chunk,
+                          unroll=cfg.scan_unroll)
+    y = y / jnp.maximum(jnp.abs(nrm), 1.0).astype(y.dtype)
+    y = rmsnorm({"scale": p["norm"].reshape(-1)},
+                y.reshape(B_, S, H * P)).reshape(B_, S, H, P)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bshp,hpd->bsd", y, p["w_down"].astype(x.dtype))
+    if not return_cache:
+        return out
+    return out, MlstmCache(c=cT, n=nT[..., 0])
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    _, _, H, P, N = _mlstm_dims(cfg)
+    return MlstmCache(c=jnp.zeros((batch, H, N, P), jnp.float32),
+                      n=jnp.zeros((batch, H, N), jnp.float32))
+
+
+def mlstm_decode(cfg: ModelConfig, p, x, cache: MlstmCache):
+    B_, _, D = x.shape
+    _, d_inner, H, P, N = _mlstm_dims(cfg)
+    v, z, q, k, i_g, log_f = _mlstm_gates(p, x)
+    scale = N ** -0.5
+    X = v[:, 0].astype(jnp.float32) * i_g[:, 0, :, None]
+    y, c = ssd_step(cache.c, log_f[:, 0], k[:, 0] * scale, X, q[:, 0])
+    n = cache.n * jnp.exp(log_f[:, 0])[..., None] \
+        + (k[:, 0] * scale).astype(jnp.float32) * i_g[:, 0, :, None]
+    nrm = jnp.einsum("bhn,bhn->bh", q[:, 0].astype(jnp.float32), n)
+    y = y / jnp.maximum(jnp.abs(nrm), 1.0)[..., None].astype(y.dtype)
+    y = rmsnorm({"scale": p["norm"].reshape(-1)},
+                y.reshape(B_, 1, H * P)).reshape(B_, H, P)
+    y = y * jax.nn.silu(z[:, 0])
+    out = jnp.einsum("bhp,hpd->bd", y, p["w_down"].astype(x.dtype))
+    return out[:, None, :], MlstmCache(c=c, n=n)
+
+
+# -----------------------------------------------------------------------
+# sLSTM
+# -----------------------------------------------------------------------
+
+class SlstmCache(NamedTuple):
+    c: jnp.ndarray    # (B, H, P)
+    n: jnp.ndarray
+    h: jnp.ndarray
+    m: jnp.ndarray    # exponential-gate stabilizer
+
+
+def _slstm_dims(cfg: ModelConfig):
+    D = cfg.d_model
+    H = cfg.n_heads
+    P = D // H
+    return D, H, P
+
+
+def slstm_def(cfg: ModelConfig) -> dict:
+    D, H, P = _slstm_dims(cfg)
+    d = {}
+    for g in ("z", "i", "f", "o"):
+        d[f"w{g}"] = ParamDef((D, H, P), ("fsdp", "heads", None))
+        d[f"r{g}"] = ParamDef((H, P, P), ("heads", None, None), axis=-2)
+        d[f"b{g}"] = ParamDef((H, P), ("heads", None), init="zeros")
+    # post-FFN (factor 4/3 per the xLSTM paper)
+    F = int(D * 4 / 3)
+    d["ffn_up"] = ParamDef((D, F), ("fsdp", "mlp"))
+    d["ffn_down"] = ParamDef((F, D), ("mlp", "fsdp"))
+    return d
+
+
+def _slstm_cell(p, xg, state: SlstmCache):
+    """One step. xg: dict gate -> (B, H, P) pre-activations from input."""
+    c, n, h, m = state
+    pre = {g: xg[g] + jnp.einsum("bhp,hpq->bhq", h,
+                                 p[f"r{g}"].astype(h.dtype))
+           for g in ("z", "i", "f", "o")}
+    z = jnp.tanh(pre["z"].astype(jnp.float32))
+    o = jax.nn.sigmoid(pre["o"].astype(jnp.float32))
+    log_i = pre["i"].astype(jnp.float32)                 # exponential gate
+    log_f = jax.nn.log_sigmoid(pre["f"].astype(jnp.float32))
+    m_new = jnp.maximum(log_f + m, log_i)                # stabilizer
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = jnp.maximum(f_s * n + i_s, 1e-6)
+    h_new = o * c_new / n_new
+    return SlstmCache(c_new, n_new, h_new.astype(h.dtype), m_new)
+
+
+def slstm_apply(cfg: ModelConfig, p, x, return_cache: bool = False):
+    B_, S, D = x.shape
+    D, H, P = _slstm_dims(cfg)
+    xg = {g: jnp.einsum("bsd,dhp->bshp", x, p[f"w{g}"].astype(x.dtype))
+          + p[f"b{g}"].astype(x.dtype) for g in ("z", "i", "f", "o")}
+    state = SlstmCache(
+        c=jnp.zeros((B_, H, P), jnp.float32),
+        n=jnp.ones((B_, H, P), jnp.float32),
+        h=jnp.zeros((B_, H, P), x.dtype),
+        m=jnp.zeros((B_, H, P), jnp.float32))
+
+    def step(st, xs):
+        st = _slstm_cell(p, {g: xs[gi] for gi, g in
+                             enumerate(("z", "i", "f", "o"))}, st)
+        return st, st.h
+
+    xs = jnp.stack([jnp.moveaxis(xg[g], 1, 0)
+                    for g in ("z", "i", "f", "o")], axis=1)  # (S,4,B,H,P)
+    state, hs = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(hs, 0, 1).reshape(B_, S, D)
+    # post-FFN
+    f = jax.nn.gelu(jnp.einsum(
+        "bsd,df->bsf", y, p["ffn_up"].astype(x.dtype)))
+    out = jnp.einsum("bsf,fd->bsd", f, p["ffn_down"].astype(x.dtype))
+    if not return_cache:
+        return out
+    return out, state
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    D, H, P = _slstm_dims(cfg)
+    return SlstmCache(
+        c=jnp.zeros((batch, H, P), jnp.float32),
+        n=jnp.ones((batch, H, P), jnp.float32),
+        h=jnp.zeros((batch, H, P), dtype),
+        m=jnp.zeros((batch, H, P), jnp.float32))
+
+
+def slstm_decode(cfg: ModelConfig, p, x, cache: SlstmCache):
+    B_ = x.shape[0]
+    xg = {g: jnp.einsum("bd,dhp->bhp", x[:, 0], p[f"w{g}"].astype(x.dtype))
+          + p[f"b{g}"].astype(x.dtype) for g in ("z", "i", "f", "o")}
+    cache = _slstm_cell(p, xg, cache)
+    D, H, P = _slstm_dims(cfg)
+    y = cache.h.reshape(B_, 1, D)
+    f = jax.nn.gelu(jnp.einsum(
+        "bsd,df->bsf", y, p["ffn_up"].astype(x.dtype)))
+    return jnp.einsum("bsf,fd->bsd", f, p["ffn_down"].astype(x.dtype)), cache

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (Optimizer, adamw, adafactor,
+                                    get_optimizer, warmup_cosine)
+from repro.optim import compress
+
+__all__ = ["Optimizer", "adamw", "adafactor", "get_optimizer",
+           "warmup_cosine", "compress"]

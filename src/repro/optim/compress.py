@@ -1,0 +1,48 @@
+"""Gradient compression for cross-pod reduction.
+
+Two schemes, applied to the gradient tree *before* the optimizer:
+  * bf16: cast gradients to bf16 for the all-reduce (2x wire bytes).
+  * int8 + error feedback: per-tensor symmetric int8 quantization; the
+    quantization residual is carried in an error-feedback buffer so the
+    compression bias vanishes over steps (Seide et al. / 1-bit SGD lineage).
+
+Under jit + GSPMD the cast happens before the reduce-scatter/all-reduce
+that grad averaging lowers to, so the collective moves the compressed
+payload. Error-feedback state shards like the gradient itself.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+def bf16_compress(grads: Tree) -> Tree:
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def init_error_feedback(params: Tree) -> Tree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+
+
+def int8_compress_decompress(g: jnp.ndarray, err: jnp.ndarray
+                             ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize g+err to int8, return (dequantized, new error)."""
+    x = g.astype(jnp.float32) + err.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, (x - deq).astype(jnp.bfloat16)
+
+
+def int8_with_error_feedback(grads: Tree, err_state: Tree
+                             ) -> tuple[Tree, Tree]:
+    out = jax.tree.map(int8_compress_decompress, grads, err_state)
+    deq = jax.tree.map(lambda o: o[0], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda o: o[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return deq, new_err

@@ -1,0 +1,190 @@
+"""Optimizers with shardable state trees.
+
+Each optimizer exposes `init / update / state_defs`; `state_defs` mirrors
+the parameter `ParamDef` tree so the launcher can derive NamedShardings for
+optimizer state exactly like for params (ZeRO: states inherit the param's
+FSDP+TP sharding). Adafactor offers a factored second moment + bf16 first
+moment for the 1T-parameter configs where full f32 Adam state would not fit
+the per-device HBM budget (see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ParamDef, is_def
+
+Tree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Tree], Tree]
+    update: Callable[[Tree, Tree, Tree, jnp.ndarray], tuple[Tree, Tree]]
+    state_defs: Callable[[Tree], Tree]
+
+
+def _tmap(f, *trees, **kw):
+    return jax.tree.map(f, *trees, **kw)
+
+
+# -----------------------------------------------------------------------
+# AdamW
+# -----------------------------------------------------------------------
+
+def adamw(lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, moment_dtype=jnp.float32) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        return {
+            "m": _tmap(lambda p: jnp.zeros(p.shape, moment_dtype), params),
+            "v": _tmap(lambda p: jnp.zeros(p.shape, moment_dtype), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, step=None):
+        count = state["count"] + 1
+        stepf = count.astype(jnp.float32)
+        lr_t = lr_fn(stepf)
+        bc1 = 1.0 - b1 ** stepf
+        bc2 = 1.0 - b2 ** stepf
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            mh = m_new / bc1
+            vh = v_new / bc2
+            delta = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr_t * delta
+            return (p_new.astype(p.dtype), m_new.astype(moment_dtype),
+                    v_new.astype(moment_dtype))
+
+        out = _tmap(upd, grads, state["m"], state["v"], params)
+        new_params = _tmap(lambda o: o[0], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        new_m = _tmap(lambda o: o[1], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        new_v = _tmap(lambda o: o[2], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "count": count}
+
+    def state_defs(param_defs):
+        mom = _tmap(lambda d: ParamDef(d.shape, d.logical, init="zeros"),
+                    param_defs, is_leaf=is_def)
+        return {"m": mom, "v": mom,
+                "count": ParamDef((), (), init="zeros")}
+
+    return Optimizer(init, update, state_defs)
+
+
+# -----------------------------------------------------------------------
+# Adafactor (factored second moment, bf16 first moment)
+# -----------------------------------------------------------------------
+
+def adafactor(lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+              b1: float = 0.9, decay: float = 0.99, eps: float = 1e-30,
+              weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def vr(p):
+            return jnp.zeros(p.shape[:-1] if _factored(p.shape) else p.shape,
+                             jnp.float32)
+
+        def vc(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if _factored(p.shape) else jnp.zeros((), jnp.float32))
+
+        return {
+            "m": _tmap(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params),
+            "vr": _tmap(vr, params),
+            "vc": _tmap(vc, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, step=None):
+        count = state["count"] + 1
+        lr_t = lr_fn(count.astype(jnp.float32))
+
+        def upd(g, m, vr, vc, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(g.shape):
+                vr_new = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc_new = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+                denom = (vr_new[..., None] * vc_new[..., None, :]
+                         / jnp.maximum(
+                             jnp.mean(vr_new, axis=-1,
+                                      keepdims=True)[..., None], eps))
+                pre = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+            else:
+                vr_new = decay * vr + (1 - decay) * g2
+                vc_new = vc
+                pre = g * jax.lax.rsqrt(jnp.maximum(vr_new, eps))
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * pre
+            delta = m_new
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr_t * delta
+            return (p_new.astype(p.dtype), m_new.astype(jnp.bfloat16),
+                    vr_new, vc_new)
+
+        out = _tmap(upd, grads, state["m"], state["vr"], state["vc"],
+                    params)
+        pick = lambda i: _tmap(lambda o: o[i], out,  # noqa: E731
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"m": pick(1), "vr": pick(2), "vc": pick(3),
+                         "count": count}
+
+    def state_defs(param_defs):
+        def vr(d):
+            if len(d.shape) >= 2:
+                return ParamDef(d.shape[:-1], d.logical[:-1], init="zeros")
+            return ParamDef(d.shape, d.logical, init="zeros")
+
+        def vc(d):
+            if len(d.shape) >= 2:
+                return ParamDef(d.shape[:-2] + d.shape[-1:],
+                                d.logical[:-2] + d.logical[-1:],
+                                init="zeros")
+            return ParamDef((), (), init="zeros")
+
+        mom = _tmap(lambda d: ParamDef(d.shape, d.logical, init="zeros"),
+                    param_defs, is_leaf=is_def)
+        return {"m": mom,
+                "vr": _tmap(vr, param_defs, is_leaf=is_def),
+                "vc": _tmap(vc, param_defs, is_leaf=is_def),
+                "count": ParamDef((), (), init="zeros")}
+
+    return Optimizer(init, update, state_defs)
+
+
+def warmup_cosine(peak_lr: float, warmup: int = 1000,
+                  total: int = 100_000, floor: float = 0.1):
+    def lr(step):
+        warm = peak_lr * step / max(1, warmup)
+        frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5
+                         * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def get_optimizer(name: str, lr=3e-4, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    raise ValueError(f"unknown optimizer {name}")

@@ -1,0 +1,6 @@
+from repro.sparse.tensor import SparseTensor, from_dense
+from repro.sparse import synthetic
+from repro.sparse.io import read_tns, write_tns
+
+__all__ = ["SparseTensor", "from_dense", "synthetic", "read_tns",
+           "write_tns"]

@@ -1,0 +1,191 @@
+"""Baseline sparse tensor formats the paper compares against (§2.3):
+
+  * HiCOO  — block-based hierarchical COO (Li et al. [18]): nonzeros
+    sorted by multi-dimensional block key; per-block coordinates split
+    into (block index, element offset) with small offset types.
+  * CSF    — compressed sparse fiber (SPLATT [20]): a fiber tree per mode
+    order; MTTKRP is the classic bottom-up traversal, expressed here as a
+    chain of sorted segment reductions (the TPU-native equivalent of the
+    per-subtree accumulation).
+
+Both exist to make Fig. 9 (MTTKRP across formats) and Fig. 12 (storage)
+honest head-to-heads inside one runtime, and to document *why* the
+mode-agnostic single-copy ALTO wins: CSF needs one tree per mode for
+conflict-free updates; HiCOO's compression and balance depend on the
+block occupancy of the data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.tensor import SparseTensor
+
+
+# ---------------------------------------------------------------------------
+# HiCOO
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HiCooTensor:
+    dims: tuple[int, ...]
+    block_bits: int
+    bptr: np.ndarray          # (n_blocks + 1,) int64 — nnz range per block
+    bcoords: np.ndarray       # (n_blocks, N) int32 — block indices
+    ecoords: np.ndarray       # (M, N) uint8 — element offsets in block
+    values: jnp.ndarray       # (M,)
+    blk_of_nnz: jnp.ndarray   # (M,) int32 — owning block per nonzero
+
+    @property
+    def nnz(self) -> int:
+        return self.ecoords.shape[0]
+
+    @property
+    def n_blocks(self) -> int:
+        return self.bcoords.shape[0]
+
+    def storage_bytes(self) -> int:
+        """Paper Fig. 12 accounting: bptr 8B/block, bi 4B/mode/block,
+        ei 1B/mode/nnz, values 4B."""
+        N = len(self.dims)
+        return (8 * (self.n_blocks + 1) + 4 * N * self.n_blocks
+                + 1 * N * self.nnz + 4 * self.nnz)
+
+
+def build_hicoo(x: SparseTensor, block_bits: int = 7) -> HiCooTensor:
+    """Sort by block key, split coords into (block, offset) (Fig. 3b)."""
+    b = (x.coords >> block_bits).astype(np.int64)
+    e = (x.coords & ((1 << block_bits) - 1)).astype(np.uint8)
+    order = np.lexsort(tuple(b[:, n] for n in range(x.ndim - 1, -1, -1)))
+    b, e, v = b[order], e[order], np.asarray(x.values)[order]
+    new_blk = np.any(b[1:] != b[:-1], axis=1)
+    starts = np.concatenate([[0], np.nonzero(new_blk)[0] + 1])
+    bptr = np.concatenate([starts, [x.nnz]]).astype(np.int64)
+    blk_id = np.cumsum(np.concatenate([[0], new_blk.astype(np.int64)]))
+    return HiCooTensor(dims=x.dims, block_bits=block_bits, bptr=bptr,
+                       bcoords=b[starts].astype(np.int32), ecoords=e,
+                       values=jnp.asarray(v),
+                       blk_of_nnz=jnp.asarray(blk_id.astype(np.int32)))
+
+
+def hicoo_coords(h: HiCooTensor) -> jnp.ndarray:
+    """Reconstruct full coordinates (block << bits | offset)."""
+    b = jnp.asarray(h.bcoords)[h.blk_of_nnz]
+    return ((b << h.block_bits)
+            | jnp.asarray(h.ecoords.astype(np.int32))).astype(jnp.int32)
+
+
+def mttkrp_hicoo(h: HiCooTensor, factors: Sequence[jnp.ndarray],
+                 mode: int) -> jnp.ndarray:
+    """HiCOO MTTKRP: delinearize block+offset, scatter-add (block-sorted
+    order gives the cache locality on CPU; on TPU it is a scatter like
+    COO — which is the paper's point about block formats)."""
+    coords = hicoo_coords(h)
+    out = None
+    for m, A in enumerate(factors):
+        if m == mode:
+            continue
+        rows = A[coords[:, m]]
+        out = rows if out is None else out * rows
+    contrib = h.values[:, None] * out
+    res = jnp.zeros((factors[mode].shape[0], contrib.shape[-1]),
+                    contrib.dtype)
+    return res.at[coords[:, mode]].add(contrib)
+
+
+# ---------------------------------------------------------------------------
+# CSF
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CsfTensor:
+    """One fiber tree for a given mode order (root first)."""
+    dims: tuple[int, ...]
+    mode_order: tuple[int, ...]        # e.g. (1, 0, 2): root mode first
+    fids: list[np.ndarray]             # per level: node ids (mode index)
+    parent: list[np.ndarray]           # per level>0: parent node position
+    values: jnp.ndarray                # (M,) leaf values (sorted)
+
+    @property
+    def nnz(self) -> int:
+        return self.values.shape[0]
+
+    def storage_bytes(self) -> int:
+        """fids 4B/node + parent ptr 4B/node + values 4B/nnz (a SPLATT
+        fptr-style layout lower bound)."""
+        total = 4 * self.nnz
+        for lvl in range(len(self.fids)):
+            total += 4 * len(self.fids[lvl])
+            if lvl > 0:
+                total += 4 * len(self.parent[lvl])
+        return total
+
+
+def build_csf(x: SparseTensor, root: int = 0) -> CsfTensor:
+    order = (root,) + tuple(m for m in range(x.ndim) if m != root)
+    c = x.coords[:, order]
+    perm = np.lexsort(tuple(c[:, n] for n in range(x.ndim - 1, -1, -1)))
+    c = c[perm]
+    v = np.asarray(x.values)[perm]
+    N = x.ndim
+    fids, parent = [], []
+    prev_node_of_row = None                 # node position per nnz row
+    for lvl in range(N):
+        prefix = c[:, :lvl + 1]
+        new = np.ones(len(c), bool)
+        new[1:] = np.any(prefix[1:] != prefix[:-1], axis=1)
+        node_of_row = np.cumsum(new) - 1
+        starts = np.nonzero(new)[0]
+        fids.append(c[starts, lvl].astype(np.int32))
+        if lvl == 0:
+            parent.append(np.zeros(0, np.int32))
+        else:
+            parent.append(prev_node_of_row[starts].astype(np.int32))
+        prev_node_of_row = node_of_row
+    return CsfTensor(dims=x.dims, mode_order=order, fids=fids,
+                     parent=parent, values=jnp.asarray(v))
+
+
+def mttkrp_csf_root(t: CsfTensor, factors: Sequence[jnp.ndarray]
+                    ) -> jnp.ndarray:
+    """Root-mode MTTKRP: bottom-up traversal (paper §2.3.3) as a chain of
+    sorted segment sums. Conflict-free per subtree — the reason CSF needs
+    one tree copy per mode."""
+    N = len(t.dims)
+    R = factors[0].shape[1]
+    # leaves: val * A^(leaf mode) rows
+    leaf_mode = t.mode_order[-1]
+    cur = t.values[:, None] * factors[leaf_mode][jnp.asarray(t.fids[-1])]
+    # fold up: at each internal level, segment-sum children then multiply
+    # by that level's factor rows
+    for lvl in range(N - 2, 0, -1):
+        seg = jnp.asarray(t.parent[lvl + 1])
+        cur = jax.ops.segment_sum(cur, seg,
+                                  num_segments=len(t.fids[lvl]),
+                                  indices_are_sorted=True)
+        m = t.mode_order[lvl]
+        cur = cur * factors[m][jnp.asarray(t.fids[lvl])]
+    seg = jnp.asarray(t.parent[1])
+    cur = jax.ops.segment_sum(cur, seg, num_segments=len(t.fids[0]),
+                              indices_are_sorted=True)
+    root = t.mode_order[0]
+    out = jnp.zeros((t.dims[root], R), cur.dtype)
+    return out.at[jnp.asarray(t.fids[0])].set(cur)
+
+
+class CsfAll:
+    """The paper's 'SPLATT-ALL' configuration: N tree copies, best speed,
+    N× the storage (Fig. 12's mode-specific cost)."""
+
+    def __init__(self, x: SparseTensor):
+        self.trees = [build_csf(x, root=m) for m in range(x.ndim)]
+
+    def mttkrp(self, factors, mode: int) -> jnp.ndarray:
+        return mttkrp_csf_root(self.trees[mode], factors)
+
+    def storage_bytes(self) -> int:
+        return sum(t.storage_bytes() for t in self.trees)

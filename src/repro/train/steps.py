@@ -1,0 +1,205 @@
+"""Train / serve step builders.
+
+`make_train_step` produces a pure function (params, opt_state, batch) ->
+(params, opt_state, metrics) with:
+  * optional microbatch gradient accumulation via lax.scan (the standard
+    memory lever for deep configs — it also lets XLA overlap the
+    reduce-scatter of one microbatch's grads with the next's backward);
+  * optional gradient compression (bf16 / int8+error-feedback) applied
+    before grad averaging so cross-pod collectives move compressed bytes;
+  * global-norm clipping.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.optim.optimizers import Optimizer
+from repro.optim import compress as compress_lib
+
+Tree = Any
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Token CE with -1 = ignore. logits (B,S,V) f32, labels (B,S) i32."""
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    loss = (lse - ll) * mask
+    return jnp.sum(loss) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _chunked_ce(cfg: ModelConfig, params, hidden, labels, chunk: int):
+    """CE via a remat'd scan over sequence chunks: the (B,C,V) logits of
+    one chunk are the only vocab-sized live buffer (vs (B,S,V) f32 —
+    for a 152k vocab at 4k seq that's the largest activation in the
+    whole step)."""
+    from repro.models.model import unembed_params
+    from repro.models.common import unembed
+    B, S, D = hidden.shape
+    C = min(chunk, S)
+    while S % C:
+        C -= 1
+    nC = S // C
+    emb = unembed_params(cfg, params)
+    hc = jnp.moveaxis(hidden.reshape(B, nC, C, D), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nC, C), 1, 0)
+
+    def body(carry, args):
+        h, lab = args
+        logits = unembed(emb, h)
+        mask = (lab >= 0).astype(jnp.float32)
+        safe = jnp.maximum(lab, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        s, n = carry
+        return (s + jnp.sum((lse - ll) * mask), n + jnp.sum(mask)), None
+
+    body = jax.checkpoint(body)
+    (s, n), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc), unroll=nC if cfg.scan_unroll else 1)
+    return s / jnp.maximum(n, 1.0)
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch):
+        if cfg.loss_seq_chunk > 0:
+            hidden, aux = model_lib.forward_hidden(cfg, params, batch)
+            ce = _chunked_ce(cfg, params, hidden, batch["labels"],
+                             cfg.loss_seq_chunk)
+        else:
+            logits, aux = model_lib.forward(cfg, params, batch)
+            ce = cross_entropy(logits, batch["labels"])
+        loss = ce + cfg.router_aux_coef * aux
+        return loss, {"loss": loss, "ce": ce, "aux": aux}
+    return loss_fn
+
+
+def global_norm(tree: Tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree: Tree, max_norm: float) -> Tree:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-6))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                    clip_norm: float = 1.0,
+                    compression: str | None = None):
+    """compression: None | 'bf16' | 'int8_ef'."""
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    accum = max(1, cfg.grad_accum)
+
+    def compute_grads(params, batch):
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+        def _split(key, x):
+            ax = 1 if key == "positions3" else 0   # (3, B, S) batches dim 1
+            n = x.shape[ax] // accum
+            parts = jnp.moveaxis(
+                x.reshape(x.shape[:ax] + (accum, n) + x.shape[ax + 1:]),
+                ax, 0)
+            return parts
+
+        micro = {k: _split(k, v) for k, v in batch.items()}
+
+        def body(carry, mb):
+            g_acc, m_acc = carry
+            (loss, metrics), g = grad_fn(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(a.dtype), g_acc, g)
+            m_acc = jax.tree.map(lambda a, b: a + b, m_acc, metrics)
+            return (g_acc, m_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+        m0 = {"loss": 0.0, "ce": 0.0, "aux": 0.0}
+        m0 = jax.tree.map(jnp.float32, m0)
+        (grads, metrics), _ = jax.lax.scan(
+            body, (g0, m0), micro, unroll=accum if cfg.scan_unroll else 1)
+        grads = jax.tree.map(lambda g: g / accum, grads)
+        metrics = jax.tree.map(lambda m: m / accum, metrics)
+        return grads, metrics
+
+    def apply_update(grads, opt_state, params):
+        """Optimizer update; opt_update_chunks > 1 sequences leaf GROUPS:
+        each group's gradient inputs are barrier-gated on the previous
+        group's outputs, so only one group's f32 update temporaries are
+        live at a time (the 1T-param configs would otherwise hold f32
+        copies of every leaf simultaneously)."""
+        chunks = max(1, cfg.opt_update_chunks)
+        if chunks == 1:
+            return optimizer.update(grads, opt_state, params)
+        gl, tdef = jax.tree.flatten(grads)
+        pl = jax.tree.flatten(params)[0]
+        state_keys = [k for k in opt_state if k != "count"]
+        sl = {k: jax.tree.flatten(opt_state[k])[0] for k in state_keys}
+        n = len(gl)
+        per = -(-n // chunks)
+        new_p = [None] * n
+        new_s: dict = {k: [None] * n for k in state_keys}
+        count0 = opt_state["count"]
+        count_new = None
+        token = None
+        for i in range(0, n, per):
+            idx = list(range(i, min(n, i + per)))
+            sub_g = [gl[j] for j in idx]
+            if token is not None:
+                sub_g = [jax.lax.optimization_barrier((g, token))[0]
+                         for g in sub_g]
+            sub_state = {k: [sl[k][j] for j in idx] for k in state_keys}
+            sub_state["count"] = count0
+            p2, s2 = optimizer.update(sub_g, sub_state,
+                                      [pl[j] for j in idx])
+            count_new = s2["count"]
+            token = p2[-1].ravel()[:1]
+            for o, j in enumerate(idx):
+                new_p[j] = p2[o]
+                for k in state_keys:
+                    new_s[k][j] = s2[k][o]
+        out_state = {k: jax.tree.unflatten(
+            jax.tree.structure(opt_state[k]), new_s[k])
+            for k in state_keys}
+        out_state["count"] = count_new
+        return jax.tree.unflatten(tdef, new_p), out_state
+
+    def train_step(params, opt_state, batch, compress_state=None):
+        grads, metrics = compute_grads(params, batch)
+        if compression == "bf16":
+            grads = compress_lib.bf16_compress(grads)
+        elif compression == "int8_ef":
+            grads, compress_state = compress_lib.int8_with_error_feedback(
+                grads, compress_state)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        params, opt_state = apply_update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        if compression == "int8_ef":
+            return params, opt_state, metrics, compress_state
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, s_max: int):
+    def prefill_step(params, batch):
+        return model_lib.prefill(cfg, params, batch, s_max)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, tokens, cache, index, positions3=None):
+        return model_lib.decode_step(cfg, params, tokens, cache, index,
+                                     positions3=positions3)
+    return decode_step

@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward
+and one train step on CPU, asserting output shapes and no NaNs.
+The FULL configs are exercised only via the dry-run (launch/dryrun.py)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced_config, shapes_for
+from repro.models import model as M
+from repro.models.common import materialize
+from repro.optim import get_optimizer
+from repro.train.steps import make_train_step
+
+
+def make_batch(cfg, B, S, seed=0):
+    rng = np.random.default_rng(seed)
+    b = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32))}
+    b["labels"] = b["tokens"]
+    if cfg.family == "audio":
+        b["frames"] = jnp.asarray(rng.standard_normal(
+            (B, cfg.encoder_seq, cfg.d_model)).astype(np.float32))
+    if cfg.family == "vlm":
+        vis = cfg.vision_prefix
+        b["tokens"] = b["tokens"][:, :S - vis]
+        b["patch_embeds"] = jnp.asarray(rng.standard_normal(
+            (B, vis, cfg.d_model)).astype(np.float32))
+        b["positions3"] = jnp.asarray(
+            np.broadcast_to(np.arange(S, dtype=np.int32),
+                            (3, B, S)).copy())
+        b["labels"] = jnp.concatenate(
+            [jnp.full((B, vis), -1, jnp.int32), b["labels"][:, :S - vis]],
+            axis=1)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_smoke(arch):
+    cfg = reduced_config(arch)
+    params = materialize(M.model_def(cfg), jax.random.PRNGKey(0))
+    B, S = 2, 32
+    batch = make_batch(cfg, B, S)
+    logits, aux = jax.jit(lambda p, b: M.forward(cfg, p, b))(params, batch)
+    exp_S = S
+    assert logits.shape == (B, exp_S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = reduced_config(arch)
+    params = materialize(M.model_def(cfg), jax.random.PRNGKey(0))
+    opt = get_optimizer(cfg.optimizer, lr=1e-3)
+    state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, opt))
+    batch = make_batch(cfg, 2, 32)
+    params, state, metrics = step(params, state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert all(bool(jnp.isfinite(x).all())
+               for x in jax.tree.leaves(params))
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "granite-moe-3b-a800m",
+                                  "xlstm-1.3b", "zamba2-7b",
+                                  "whisper-base", "qwen2-vl-72b"])
+def test_decode_consistency(arch):
+    """prefill(S-1) + decode(last token) ≈ forward logits at S-1."""
+    cfg = reduced_config(arch)
+    params = materialize(M.model_def(cfg), jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = make_batch(cfg, B, S)
+    logits_full, _ = jax.jit(lambda p, b: M.forward(cfg, p, b))(params,
+                                                                batch)
+    if cfg.family == "vlm":
+        pytest.skip("vlm decode uses text-only continuation (covered in "
+                    "dry-run decode cells)")
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :S - 1]
+    pre["labels"] = batch["labels"][:, :S - 1]
+    lg_pre, cache = jax.jit(
+        lambda p, b: M.prefill(cfg, p, b, s_max=S))(params, pre)
+    lg_dec, _ = jax.jit(
+        lambda p, t, c: M.decode_step(cfg, p, t, c, S - 1))(
+        params, batch["tokens"][:, S - 1:S], cache)
+    scale = float(jnp.max(jnp.abs(logits_full))) + 1e-9
+    e_pre = float(jnp.max(jnp.abs(lg_pre - logits_full[:, S - 2]))) / scale
+    e_dec = float(jnp.max(jnp.abs(lg_dec - logits_full[:, S - 1]))) / scale
+    assert e_pre < 2e-2, e_pre
+    assert e_dec < 2e-2, e_dec
+
+
+def test_exact_assigned_configs():
+    """The full configs carry the exact assigned hyperparameters."""
+    spec = {
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151_936),
+        "glm4-9b": (40, 4096, 32, 2, 13_696, 151_552),
+        "smollm-360m": (32, 960, 15, 5, 2560, 49_152),
+        "minitron-8b": (32, 4096, 32, 8, 16_384, 256_000),
+        "whisper-base": (6, 512, 8, 8, 2048, 51_865),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50_304),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29_568, 152_064),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49_155),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163_840),
+        "zamba2-7b": (81, 3584, 32, 32, 14_336, 32_000),
+    }
+    for arch, (L, D, H, KV, FF, V) in spec.items():
+        cfg = get_config(arch)
+        assert cfg.n_layers == L and cfg.d_model == D
+        assert cfg.n_heads == H and cfg.n_kv_heads == KV
+        assert cfg.d_ff == FF and cfg.vocab_size == V
+    assert get_config("kimi-k2-1t-a32b").n_experts == 384
+    assert get_config("granite-moe-3b-a800m").n_experts == 40
+    assert get_config("zamba2-7b").ssm_state == 64
+    assert get_config("qwen2-vl-72b").mrope
+    assert get_config("qwen2-1.5b").qkv_bias
+
+
+def test_shape_skip_rules():
+    """long_500k only for sub-quadratic archs (DESIGN.md §5)."""
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        names = [s.name for s in shapes_for(cfg)]
+        if arch in ("xlstm-1.3b", "zamba2-7b"):
+            assert "long_500k" in names
+        else:
+            assert "long_500k" not in names
+
+
+def test_param_counts_plausible():
+    """Sanity: full configs land near their nameplate sizes."""
+    expect = {"qwen2-1.5b": (1.2e9, 2.2e9),
+              "glm4-9b": (8e9, 12e9),
+              "smollm-360m": (0.3e9, 0.5e9),
+              "kimi-k2-1t-a32b": (0.9e12, 1.2e12),
+              "zamba2-7b": (6e9, 9e9),
+              "qwen2-vl-72b": (6.0e10, 8.5e10)}
+    for arch, (lo, hi) in expect.items():
+        n = M.count_params(get_config(arch))
+        assert lo < n < hi, (arch, n)
+    # MoE active params far below total
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert M.count_active_params(kimi) < 0.1 * M.count_params(kimi)

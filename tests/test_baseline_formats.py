@@ -1,0 +1,82 @@
+"""HiCOO and CSF baseline formats (the paper's comparison points)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mttkrp as cm
+from repro.sparse import baselines, synthetic
+
+
+def _factors(dims, R, seed=0):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal((I, R)).astype(np.float32))
+            for I in dims]
+
+
+@pytest.mark.parametrize("gen,dims,nnz", [
+    (synthetic.uniform_tensor, (40, 60, 30), 2000),
+    (synthetic.blocked_tensor, (64, 64, 64), 3000),
+    (synthetic.uniform_tensor, (20, 16, 12, 8), 1500),
+])
+def test_baselines_vs_dense(gen, dims, nnz):
+    x = gen(dims, nnz, seed=3)
+    factors = _factors(dims, 16)
+    dense = x.todense()
+    h = baselines.build_hicoo(x, block_bits=4)
+    csf = baselines.CsfAll(x)
+    for mode in range(len(dims)):
+        ref = cm.dense_mttkrp_reference(dense, factors, mode)
+        scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+        eh = float(jnp.max(jnp.abs(
+            baselines.mttkrp_hicoo(h, factors, mode) - ref))) / scale
+        ec = float(jnp.max(jnp.abs(
+            csf.mttkrp(factors, mode) - ref))) / scale
+        assert eh < 1e-4 and ec < 1e-4, (mode, eh, ec)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([2, 4, 7]))
+def test_hicoo_roundtrip_property(seed, bits):
+    rng = np.random.default_rng(seed)
+    dims = tuple(int(d) for d in rng.integers(8, 200, size=3))
+    x = synthetic.uniform_tensor(dims, 500, seed=seed)
+    h = baselines.build_hicoo(x, block_bits=bits)
+    coords = np.asarray(baselines.hicoo_coords(h))
+    a = sorted(map(tuple, coords.tolist()))
+    b = sorted(map(tuple, x.coords.tolist()))
+    assert a == b
+
+
+def test_csf_tree_structure():
+    x = synthetic.uniform_tensor((10, 12, 8), 300, seed=1)
+    t = baselines.build_csf(x, root=1)
+    assert t.mode_order == (1, 0, 2)
+    # level sizes grow monotonically; leaves == nnz
+    sizes = [len(f) for f in t.fids]
+    assert sizes == sorted(sizes)
+    assert sizes[-1] == x.nnz
+    # root ids are the distinct mode-1 indices
+    np.testing.assert_array_equal(np.sort(t.fids[0]),
+                                  np.unique(x.coords[:, 1]))
+
+
+def test_storage_orderings():
+    """Fig. 12 behaviour: CSF-ALL always biggest (N copies); ALTO always
+    <= COO; HiCOO smaller than COO only when blocks are dense."""
+    from repro.core import encoding as E
+    blocked = synthetic.blocked_tensor((256, 256, 256), 60_000, block=16,
+                                       n_blocks=12, seed=0)
+    hyper = synthetic.uniform_tensor((2**15, 2**15, 2**15), 20_000, seed=0)
+    for x, dense_blocks in ((blocked, True), (hyper, False)):
+        enc = E.make_encoding(x.dims)
+        coo = x.nnz * (enc.storage_bits_coo(32) // 8 + 4)
+        alto_b = x.nnz * (enc.runtime_index_bits() // 8 + 4)
+        csf = baselines.CsfAll(x).storage_bytes()
+        hic = baselines.build_hicoo(x, block_bits=7).storage_bytes()
+        assert alto_b <= coo
+        assert csf > coo                      # N tree copies
+        if dense_blocks:
+            assert hic < coo                  # compression works
+        else:
+            assert hic > alto_b               # hyper-sparse: HiCOO loses

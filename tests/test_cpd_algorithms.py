@@ -1,0 +1,131 @@
+"""CP-ALS and CP-APR system behaviour."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import alto, cpals, cpapr, heuristics
+from repro.sparse import synthetic
+
+
+class TestCpals:
+    def test_recovers_planted_model_warm_start(self):
+        x, tf = synthetic.sparse_lowrank((30, 40, 25), rank=4,
+                                         col_support=0.25, seed=1)
+        at = alto.build(x, n_partitions=4)
+        rng = np.random.default_rng(0)
+        init = [jnp.asarray(A + 0.05 * rng.standard_normal(
+            A.shape).astype(np.float32)) for A in tf]
+        res = cpals.cp_als(at, rank=4, n_iters=100, tol=1e-9, factors=init)
+        assert res.fits[-1] > 0.99
+
+    def test_fit_monotone_from_random_init(self):
+        x, _ = synthetic.sparse_lowrank((25, 30, 20), rank=3,
+                                        col_support=0.3, seed=2)
+        at = alto.build(x, n_partitions=4)
+        res = cpals.cp_als(at, rank=5, n_iters=25, tol=0, seed=3)
+        fits = np.asarray(res.fits)
+        assert (np.diff(fits) > -1e-3).all(), fits
+
+    def test_dense_rank_exact(self):
+        rng = np.random.default_rng(0)
+        fs = [rng.standard_normal((12, 3)).astype(np.float32)
+              for _ in range(3)]
+        from repro.sparse.tensor import from_dense
+        x = from_dense(np.einsum("ar,br,cr->abc", *fs))
+        at = alto.build(x, n_partitions=2)
+        res = cpals.cp_als(at, rank=3, n_iters=150, tol=1e-10, seed=1)
+        assert res.fits[-1] > 0.999
+
+    def test_reconstruct_values(self):
+        x, tf = synthetic.sparse_lowrank((20, 20, 20), rank=3,
+                                         col_support=0.4, seed=4)
+        at = alto.build(x, n_partitions=2)
+        rng = np.random.default_rng(0)
+        init = [jnp.asarray(A + 0.02 * rng.standard_normal(
+            A.shape).astype(np.float32)) for A in tf]
+        res = cpals.cp_als(at, rank=3, n_iters=60, tol=1e-10, factors=init)
+        vals = cpals.reconstruct_values(jnp.asarray(x.coords), res.lam,
+                                        res.factors)
+        err = float(jnp.max(jnp.abs(vals - jnp.asarray(x.values))))
+        assert err < 0.05 * float(jnp.max(jnp.abs(jnp.asarray(x.values))))
+
+
+class TestCpapr:
+    @pytest.fixture(scope="class")
+    def count_tensor(self):
+        x, _ = synthetic.lowrank_count((25, 30, 20), rank=3,
+                                       nnz_target=4000, seed=5)
+        return alto.build(x, n_partitions=4)
+
+    def test_loglikelihood_increases(self, count_tensor):
+        r = cpapr.cp_apr(count_tensor, rank=3, seed=3, track_ll=True,
+                         params=cpapr.CpaprParams(k_max=10))
+        ll = r.log_likelihoods
+        assert ll[-1] > ll[0]
+        # tail should be (almost) monotone
+        assert all(b - a > -1.0 for a, b in zip(ll[3:], ll[4:]))
+
+    def test_factors_nonnegative_and_normalized(self, count_tensor):
+        r = cpapr.cp_apr(count_tensor, rank=3, seed=3,
+                         params=cpapr.CpaprParams(k_max=6))
+        for A in r.factors:
+            assert float(jnp.min(A)) >= 0.0
+            np.testing.assert_allclose(np.asarray(jnp.sum(A, axis=0)),
+                                       1.0, rtol=1e-3)
+
+    def test_pre_equals_otf(self, count_tensor):
+        """ALTO-PRE and ALTO-OTF are the same math (paper §4.3)."""
+        a = cpapr.cp_apr(count_tensor, rank=3, seed=3, pi_policy="pre",
+                         params=cpapr.CpaprParams(k_max=4))
+        b = cpapr.cp_apr(count_tensor, rank=3, seed=3, pi_policy="otf",
+                         params=cpapr.CpaprParams(k_max=4))
+        for A, B in zip(a.factors, b.factors):
+            np.testing.assert_allclose(np.asarray(A), np.asarray(B),
+                                       atol=1e-5)
+
+    def test_kkt_violation_decreases(self, count_tensor):
+        r = cpapr.cp_apr(count_tensor, rank=3, seed=3,
+                         params=cpapr.CpaprParams(k_max=10))
+        kkt = r.kkt_violations
+        assert kkt[-1] < kkt[0]
+
+    def test_poisson_model_mass(self, count_tensor):
+        """After convergence Σλ ≈ ΣX (Poisson total-mass identity)."""
+        r = cpapr.cp_apr(count_tensor, rank=3, seed=3,
+                         params=cpapr.CpaprParams(k_max=10))
+        total = float(jnp.sum(count_tensor.values))
+        assert abs(float(jnp.sum(r.lam)) - total) / total < 0.05
+
+
+class TestHeuristics:
+    def test_traversal_choice(self):
+        x = synthetic.zipf_tensor((40, 24, 16), 30_000, a=1.1, seed=1)
+        at = alto.build(x, n_partitions=4)
+        # dense-ish tensor -> high reuse -> recursive everywhere
+        for mode in range(3):
+            assert heuristics.choose_traversal(at.meta, mode) is \
+                heuristics.Traversal.RECURSIVE
+
+        x2 = synthetic.uniform_tensor((2**16, 2**16, 2**16), 5000, seed=1)
+        at2 = alto.build(x2, n_partitions=4)
+        for mode in range(3):
+            assert heuristics.choose_traversal(at2.meta, mode) is \
+                heuristics.Traversal.OUTPUT_ORIENTED
+
+    def test_reuse_classes(self):
+        assert heuristics.classify_reuse(10.0) == "high"
+        assert heuristics.classify_reuse(6.0) == "medium"
+        assert heuristics.classify_reuse(2.0) == "limited"
+
+    def test_pi_policy(self):
+        x = synthetic.uniform_tensor((2**15, 2**15, 2**15), 4000, seed=2)
+        at = alto.build(x, n_partitions=2)
+        # hyper-sparse + big factors + tiny fast memory -> PRE
+        pol = heuristics.choose_pi_policy(at.meta, rank=64,
+                                          fast_mem_bytes=1024)
+        assert pol is heuristics.PiPolicy.PRE
+        # high reuse -> OTF regardless
+        x2 = synthetic.zipf_tensor((64, 64, 64), 40_000, a=1.1, seed=2)
+        at2 = alto.build(x2, n_partitions=2)
+        assert heuristics.choose_pi_policy(at2.meta, rank=16) is \
+            heuristics.PiPolicy.OTF

@@ -1,0 +1,115 @@
+"""ALTO encoding: paper-example exactness + hypothesis round-trip laws."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding as E
+from repro.core import alto
+from repro.sparse.tensor import SparseTensor
+
+PAPER_DIMS = (4, 8, 2)
+PAPER_COORDS = np.array([[0, 3, 0], [1, 0, 0], [1, 6, 1], [2, 2, 1],
+                         [3, 1, 1], [3, 4, 0]], dtype=np.int32)
+
+
+def test_paper_example_linearization():
+    """Fig. 4/7: the six nonzeros land at line positions {2,15,20,25,42,51}
+    and 2-partitioning yields segments [2-20] / [25-51] with the paper's
+    bounding boxes."""
+    enc = E.make_encoding(PAPER_DIMS)
+    assert enc.mode_bits == (2, 3, 1)
+    assert enc.total_bits == 6
+    w = E.linearize_np(enc, PAPER_COORDS)
+    assert sorted(int(x[0]) for x in w) == [2, 15, 20, 25, 42, 51]
+
+    x = SparseTensor(PAPER_DIMS, PAPER_COORDS,
+                     np.arange(1, 7, dtype=np.float32))
+    at = alto.build(x, n_partitions=2)
+    ps = np.asarray(at.part_start)
+    pe = np.asarray(at.part_end)
+    assert ps[0].tolist() == [0, 0, 0] and pe[0].tolist() == [3, 3, 1]
+    assert ps[1].tolist() == [1, 2, 0] and pe[1].tolist() == [3, 6, 1]
+
+
+def test_paper_storage_equations():
+    """Eq. 1-3 on the paper example with byte addressing: COO 3 bytes,
+    ALTO 1 byte (3x compression), Z-Morton needs 9 bits."""
+    enc = E.make_encoding(PAPER_DIMS)
+    assert enc.storage_bits_alto(word_bits=8) == 8
+    assert enc.storage_bits_coo(word_bits=8) == 24
+    assert enc.storage_bits_sfc() == 9
+
+
+dims_strategy = st.lists(st.integers(1, 300), min_size=1, max_size=6)
+
+
+@settings(max_examples=60, deadline=None)
+@given(dims=dims_strategy, seed=st.integers(0, 2**31 - 1),
+       n=st.integers(1, 200))
+def test_roundtrip_property(dims, seed, n):
+    """linearize ∘ delinearize == id for arbitrary shapes/coords."""
+    rng = np.random.default_rng(seed)
+    coords = np.stack([rng.integers(0, I, size=n) for I in dims],
+                      axis=1).astype(np.int32)
+    enc = E.make_encoding(dims)
+    w = E.linearize_np(enc, coords)
+    back = E.delinearize_np(enc, w)
+    np.testing.assert_array_equal(back, coords)
+
+
+@settings(max_examples=40, deadline=None)
+@given(dims=dims_strategy)
+def test_bit_budget_property(dims):
+    """Every mode gets exactly ceil(log2 I) bits; total == sum (Eq. 1);
+    ALTO index bits <= COO bits <= SFC bits for any shape."""
+    enc = E.make_encoding(dims)
+    for n, I in enumerate(dims):
+        expect = (I - 1).bit_length() if I > 1 else 0
+        assert enc.mode_bits[n] == expect
+    assert enc.total_bits == sum(enc.mode_bits)
+    if enc.total_bits > 0:
+        assert enc.storage_bits_alto(64) <= enc.storage_bits_coo(64)
+
+
+@settings(max_examples=40, deadline=None)
+@given(dims=dims_strategy, seed=st.integers(0, 2**31 - 1))
+def test_order_preserving_within_mode(dims, seed):
+    """Within a mode (others fixed), the linearized index is monotone —
+    the encoding preserves spatial order on every axis."""
+    if all(d == 1 for d in dims):
+        return
+    rng = np.random.default_rng(seed)
+    n_axis = int(rng.integers(0, len(dims)))
+    if dims[n_axis] < 2:
+        return
+    base = np.array([[rng.integers(0, I) for I in dims]], dtype=np.int32)
+    a = base.copy()
+    b = base.copy()
+    lo, hi = sorted(rng.choice(dims[n_axis], size=2, replace=False))
+    a[0, n_axis], b[0, n_axis] = lo, hi
+    enc = E.make_encoding(dims)
+    wa = E.linearize_np(enc, a)[0]
+    wb = E.linearize_np(enc, b)[0]
+    # multiword compare: most significant word last
+    assert tuple(wa[::-1].tolist()) < tuple(wb[::-1].tolist())
+
+
+def test_mode_masks_disjoint_and_complete():
+    enc = E.make_encoding((100, 37, 5, 2))
+    masks = enc.mode_masks()
+    acc = np.zeros(enc.n_words, dtype=np.uint64)
+    for m in masks:
+        assert np.all((acc & m.astype(np.uint64)) == 0)
+        acc |= m.astype(np.uint64)
+    total_set = sum(int(bin(int(w)).count("1")) for w in acc)
+    assert total_set == enc.total_bits
+
+
+def test_sorted_after_build():
+    from repro.sparse import synthetic
+    x = synthetic.uniform_tensor((64, 64, 64), 5000, seed=1)
+    at = alto.build(x, n_partitions=4)
+    w = np.asarray(at.words)
+    key = tuple(w[:, i] for i in range(w.shape[1] - 1, -1, -1))
+    as_tuple = list(zip(*[k.tolist() for k in key]))
+    assert as_tuple == sorted(as_tuple)

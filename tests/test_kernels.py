@@ -1,0 +1,103 @@
+"""Pallas kernels (interpret mode) vs pure-jnp ref.py oracles,
+swept over shapes / dtypes / partition counts / ranks."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import alto, mttkrp as core_mttkrp
+from repro.kernels import ops, ref
+from repro.kernels.delinearize import delinearize_pallas
+from repro.kernels.mttkrp import mttkrp_partials_pallas
+from repro.kernels.cpapr_phi import phi_partials_pallas
+from repro.sparse import synthetic
+
+
+def _setup(dims, nnz, L, R, seed=0, dtype=jnp.float32, count=True):
+    x = synthetic.zipf_tensor(dims, nnz, seed=seed, count_data=count)
+    at = alto.build(x, n_partitions=L)
+    rng = np.random.default_rng(seed)
+    factors = [jnp.asarray(
+        np.abs(rng.standard_normal((I, R))).astype(np.float32) + 0.05
+    ).astype(dtype) for I in dims]
+    return x, at, factors
+
+
+@pytest.mark.parametrize("dims,nnz,L,R", [
+    ((48, 64, 32), 4000, 4, 16),
+    ((48, 64, 32), 4000, 8, 32),
+    ((16, 16, 16, 16), 3000, 4, 16),
+    ((128, 8, 255), 2000, 2, 8),
+    ((1000, 999, 17), 1000, 4, 16),
+])
+def test_mttkrp_kernel_shapes(dims, nnz, L, R):
+    x, at, factors = _setup(dims, nnz, L, R)
+    for mode in range(len(dims)):
+        got = ops.mttkrp(at, factors, mode)
+        want = core_mttkrp.mttkrp_recursive(at, factors, mode)
+        scale = float(jnp.max(jnp.abs(want))) + 1e-9
+        assert float(jnp.max(jnp.abs(got - want))) / scale < 1e-5
+
+
+@pytest.mark.parametrize("r_block", [8, 16])
+def test_mttkrp_kernel_rank_tiling(r_block):
+    x, at, factors = _setup((40, 48, 24), 3000, 4, 32)
+    got = ops.mttkrp(at, factors, 0, r_block=r_block)
+    want = core_mttkrp.mttkrp_recursive(at, factors, 0)
+    scale = float(jnp.max(jnp.abs(want))) + 1e-9
+    assert float(jnp.max(jnp.abs(got - want))) / scale < 1e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mttkrp_kernel_dtypes(dtype):
+    x, at, factors = _setup((32, 48, 24), 2000, 4, 16, dtype=dtype)
+    vals = at.values.astype(dtype)
+    at2 = alto.AltoTensor(at.meta, at.words, vals, at.part_start,
+                          at.part_end)
+    got = ops.mttkrp(at2, factors, 1)
+    want = core_mttkrp.mttkrp_recursive(at2, factors, 1)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    scale = float(jnp.max(jnp.abs(want.astype(jnp.float32)))) + 1e-9
+    diff = float(jnp.max(jnp.abs((got - want).astype(jnp.float32))))
+    assert diff / scale < tol
+
+
+@pytest.mark.parametrize("dims", [(64, 64), (48, 64, 32), (16, 8, 4, 2),
+                                  (3, 5, 7, 11, 13)])
+@pytest.mark.parametrize("block_m", [64, 256])
+def test_delinearize_kernel_sweep(dims, block_m):
+    x = synthetic.uniform_tensor(dims, 2048, seed=1)
+    at = alto.build(x, n_partitions=4)
+    got = ops.delinearize(at.meta.enc, at.words, block_m=block_m)
+    want = ref.ref_delinearize(at.meta.enc, at.words)
+    assert jnp.array_equal(got, want)
+
+
+@pytest.mark.parametrize("mode", [0, 1, 2])
+@pytest.mark.parametrize("pre", [True, False])
+def test_phi_kernel(mode, pre):
+    x, at, factors = _setup((48, 64, 32), 4000, 4, 16)
+    B = jnp.abs(factors[mode]) + 0.1
+    coords = at.coords()
+    pi = core_mttkrp.krp_rows(coords, factors, mode) if pre else None
+    got = ops.cpapr_phi(at, B, mode,
+                        factors=None if pre else factors, pi=pi)
+    want = ref.ref_pull_reduction(
+        ref.ref_phi_partials(at.meta.enc, mode, at.meta.temp_rows[mode],
+                             1e-10, at.words, at.values, at.part_start, B,
+                             factors=factors),
+        at.part_start[:, mode], x.dims[mode])
+    scale = float(jnp.max(jnp.abs(want))) + 1e-9
+    assert float(jnp.max(jnp.abs(got - want))) / scale < 1e-5
+
+
+def test_partials_match_ref_directly():
+    """Kernel partials (pre-reduction) equal the ref oracle partials."""
+    x, at, factors = _setup((40, 32, 24), 2000, 4, 16)
+    pk = mttkrp_partials_pallas(at.meta.enc, 0, at.meta.temp_rows[0],
+                                at.words, at.values, at.part_start,
+                                factors)
+    pr = ref.ref_mttkrp_partials(at.meta.enc, 0, at.meta.temp_rows[0],
+                                 at.words, at.values, at.part_start,
+                                 factors)
+    scale = float(jnp.max(jnp.abs(pr))) + 1e-9
+    assert float(jnp.max(jnp.abs(pk - pr))) / scale < 1e-5

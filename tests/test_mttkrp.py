@@ -1,0 +1,83 @@
+"""MTTKRP: all traversal variants vs the dense einsum oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import alto, mttkrp
+from repro.sparse import synthetic
+from repro.sparse.tensor import SparseTensor
+
+
+def _factors(dims, R, seed=0):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal((I, R)).astype(np.float32))
+            for I in dims]
+
+
+@pytest.mark.parametrize("gen,dims,nnz", [
+    (synthetic.uniform_tensor, (40, 60, 30), 2000),
+    (synthetic.zipf_tensor, (40, 60, 30), 2000),
+    (synthetic.blocked_tensor, (64, 64, 64), 3000),
+    (synthetic.uniform_tensor, (20, 16, 12, 8), 1500),
+])
+def test_all_variants_vs_dense(gen, dims, nnz):
+    x = gen(dims, nnz, seed=3)
+    at = alto.build(x, n_partitions=8)
+    factors = _factors(dims, 16)
+    dense = x.todense()
+    for mode in range(len(dims)):
+        ref = mttkrp.dense_mttkrp_reference(dense, factors, mode)
+        scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+        coo = mttkrp.mttkrp_coo(jnp.asarray(x.coords),
+                                jnp.asarray(x.values), factors, mode)
+        rec = mttkrp.mttkrp_recursive(at, factors, mode)
+        ori = mttkrp.mttkrp_oriented(alto.oriented_view(at, mode), factors)
+        ada = mttkrp.mttkrp_adaptive(
+            at, {mode: alto.oriented_view(at, mode)}, factors, mode)
+        for name, out in (("coo", coo), ("recursive", rec),
+                          ("oriented", ori), ("adaptive", ada)):
+            err = float(jnp.max(jnp.abs(out - ref))) / scale
+            assert err < 1e-4, (name, mode, err)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       n_part=st.sampled_from([1, 2, 4, 8, 16]),
+       rank=st.sampled_from([1, 4, 16, 32]))
+def test_partition_invariance_property(seed, n_part, rank):
+    """MTTKRP result must not depend on the partition count (the paper's
+    partitioning only affects scheduling, never the math)."""
+    rng = np.random.default_rng(seed)
+    dims = tuple(int(d) for d in rng.integers(8, 40, size=3))
+    x = synthetic.uniform_tensor(dims, 600, seed=seed)
+    factors = _factors(dims, rank, seed=seed)
+    ref = mttkrp.mttkrp_recursive(alto.build(x, n_partitions=1), factors, 0)
+    out = mttkrp.mttkrp_recursive(alto.build(x, n_partitions=n_part),
+                                  factors, 0)
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+    assert float(jnp.max(jnp.abs(out - ref))) / scale < 1e-4
+
+
+def test_balanced_partitions():
+    """Equal-nnz partitioning: every partition holds exactly Mp/L elements
+    (the perfect workload balance claim of §4.1)."""
+    x = synthetic.zipf_tensor((128, 128, 64), 10_000, seed=5)
+    at = alto.build(x, n_partitions=16)
+    assert at.words.shape[0] % 16 == 0
+    # disjoint & ordered line segments
+    w = np.asarray(at.words).reshape(16, -1, at.words.shape[-1])
+    for l in range(15):
+        last = tuple(w[l, -1][::-1].tolist())
+        first = tuple(w[l + 1, 0][::-1].tolist())
+        assert last <= first
+
+
+def test_intervals_bound_nonzeros():
+    x = synthetic.uniform_tensor((50, 60, 70), 4000, seed=9)
+    L = 8
+    at = alto.build(x, n_partitions=L)
+    coords = np.asarray(at.coords()).reshape(L, -1, 3)
+    ps, pe = np.asarray(at.part_start), np.asarray(at.part_end)
+    for l in range(L):
+        assert (coords[l] >= ps[l]).all() and (coords[l] <= pe[l]).all()
