@@ -12,8 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_call
-from repro.core import alto, heuristics, mttkrp
+from benchmarks.common import emit, plan_comparison_tensors, time_call
+from repro.core import alto, heuristics, mttkrp, plan as plan_mod
 from repro.core.cpapr import _phi
 from repro.core.mttkrp import (krp_rows, row_reduce_oriented,
                                row_reduce_recursive)
@@ -75,6 +75,44 @@ def run(quick: bool = False):
              f"speedup={t_coo / t_otf:.2f}")
         emit(f"cpapr_phi/{name}/alto_pre", t_pre,
              f"speedup={t_coo / t_pre:.2f};chosen={pol}")
+
+    run_plan_comparison(quick=quick)
+
+
+def run_plan_comparison(quick: bool = False):
+    """Φ through the execution plan: jnp reference vs Pallas, per mode."""
+    tensors = plan_comparison_tensors()
+    names = list(tensors)[:1] if quick else list(tensors)
+    for name in names:
+        gen, kw = tensors[name]
+        x = gen(seed=0, **kw)
+        at = alto.build(x, n_partitions=8)
+        rng = np.random.default_rng(0)
+        factors = [jnp.asarray(np.abs(rng.standard_normal((I, RANK))
+                                      ).astype(np.float32) + 0.05)
+                   for I in x.dims]
+        plan_ref = plan_mod.make_plan(at.meta, RANK, backend="reference")
+        plan_pal = plan_mod.make_plan(at.meta, RANK, backend="pallas")
+        views = plan_mod.build_views(at, plan_pal)
+        for m in range(x.ndim):
+            B = jnp.abs(factors[m]) + 0.1
+            view = views.get(m)
+
+            def phi_jnp(at, view, B, factors, _m=m):
+                return plan_mod.execute_phi(plan_ref, at, view, B, _m,
+                                            factors=factors, eps=EPS)
+
+            def phi_plan(at, view, B, factors, _m=m):
+                return plan_mod.execute_phi(plan_pal, at, view, B, _m,
+                                            factors=factors, eps=EPS)
+
+            t_jnp = time_call(jax.jit(phi_jnp), at, view, B, factors)
+            t_plan = time_call(phi_plan, at, view, B, factors)
+            trav = plan_pal.modes[m].traversal.value
+            emit(f"cpapr_phi_plan/{name}/mode{m}/jnp", t_jnp,
+                 f"traversal={trav};speedup_vs_jnp=1.00")
+            emit(f"cpapr_phi_plan/{name}/mode{m}/plan", t_plan,
+                 f"traversal={trav};speedup_vs_jnp={t_jnp / t_plan:.2f}")
 
 
 if __name__ == "__main__":

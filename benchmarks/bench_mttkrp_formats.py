@@ -13,8 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_call
-from repro.core import alto, mttkrp
+from benchmarks.common import emit, plan_comparison_tensors, time_call
+from repro.core import alto, mttkrp, plan as plan_mod
 from repro.sparse import baselines, synthetic
 
 TENSORS = ["uber_like", "chicago_like", "darpa_like", "nell2_like",
@@ -83,6 +83,46 @@ def run(quick: bool = False):
         emit(f"mttkrp/{name}/alto_adaptive", t_ada,
              f"speedup_vs_coo={t_coo / t_ada:.2f};"
              f"reuse={min(at.meta.fiber_reuse):.1f}")
+
+    run_plan_comparison(quick=quick)
+
+
+def run_plan_comparison(quick: bool = False):
+    """Per-mode jnp (reference backend) vs execution-plan (Pallas) rows.
+
+    The plan path runs the Pallas kernels — interpret-lowered on CPU,
+    Mosaic on TPU — through `kernels.ops`' compiled-executable cache, so
+    steady-state timings measure the kernel, not re-tracing.
+    """
+    tensors = plan_comparison_tensors()
+    names = list(tensors)[:1] if quick else list(tensors)
+    for name in names:
+        gen, kw = tensors[name]
+        x = gen(seed=0, **kw)
+        at = alto.build(x, n_partitions=8)
+        factors = _factors(x.dims, RANK)
+        plan_ref = plan_mod.make_plan(at.meta, RANK, backend="reference")
+        plan_pal = plan_mod.make_plan(at.meta, RANK, backend="pallas")
+        views = plan_mod.build_views(at, plan_pal)
+        for m in range(x.ndim):
+            def one_mode_jnp(at, views, factors, _m=m):
+                return mttkrp.mttkrp_adaptive(at, views, factors, _m,
+                                              plan=plan_ref)
+
+            def one_mode_plan(at, views, factors, _m=m):
+                # ops-level executables are cached+jitted internally
+                return plan_mod.execute_mttkrp(plan_pal, at, views,
+                                               factors, _m)
+
+            t_jnp = time_call(jax.jit(one_mode_jnp), at, views, factors)
+            t_plan = time_call(one_mode_plan, at, views, factors)
+            trav = plan_pal.modes[m].traversal.value
+            emit(f"mttkrp_plan/{name}/mode{m}/jnp", t_jnp,
+                 f"traversal={trav};speedup_vs_jnp=1.00")
+            emit(f"mttkrp_plan/{name}/mode{m}/plan", t_plan,
+                 f"traversal={trav};speedup_vs_jnp={t_jnp / t_plan:.2f};"
+                 f"r_block={plan_pal.modes[m].r_block};"
+                 f"block_m={plan_pal.modes[m].block_m}")
 
 
 if __name__ == "__main__":

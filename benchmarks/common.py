@@ -1,9 +1,26 @@
-"""Benchmark helpers: timed jit calls + CSV emission."""
+"""Benchmark helpers: timed jit calls, CSV emission, shared tensor sets."""
 from __future__ import annotations
 
 import time
 
 import jax
+
+
+def plan_comparison_tensors():
+    """Moderate-size tensors for the jnp-vs-execution-plan sweeps, shared
+    by the MTTKRP and CP-APR suites so their rows are comparable: one
+    high-reuse shape (plan routes recursive) and one hyper-sparse shape
+    (plan routes output-oriented), both with count data so the same
+    tensors feed CP-APR."""
+    from repro.sparse import synthetic
+    return {
+        "zipf_small": (synthetic.zipf_tensor,
+                       dict(dims=(64, 48, 32), nnz=20_000, a=1.1,
+                            count_data=True)),
+        "hyper_small": (synthetic.uniform_tensor,
+                        dict(dims=(4096, 2048, 1024), nnz=10_000,
+                             count_data=True)),
+    }
 
 
 def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:

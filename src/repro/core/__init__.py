@@ -4,10 +4,12 @@ from repro.core.encoding import AltoEncoding, make_encoding
 from repro.core.alto import (AltoTensor, AltoMeta, OrientedView, build,
                              oriented_view, linearize, delinearize,
                              to_sparse)
-from repro.core import heuristics, mttkrp, cpals, cpapr
+from repro.core import heuristics, mttkrp, plan, cpals, cpapr
+from repro.core.plan import ExecutionPlan, ModePlan, make_plan
 
 __all__ = [
     "AltoEncoding", "make_encoding", "AltoTensor", "AltoMeta",
     "OrientedView", "build", "oriented_view", "linearize", "delinearize",
-    "to_sparse", "heuristics", "mttkrp", "cpals", "cpapr",
+    "to_sparse", "heuristics", "mttkrp", "plan", "cpals", "cpapr",
+    "ExecutionPlan", "ModePlan", "make_plan",
 ]

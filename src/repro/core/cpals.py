@@ -1,9 +1,24 @@
 """CP-ALS on ALTO tensors (paper Alg. 1).
 
-The MTTKRP bottleneck (line 11) runs through the adaptive ALTO engine; gram
-matrices, the pseudo-inverse solve, and normalization are dense JAX. One
-full sweep over all modes is a single jitted function; the outer iteration
-is a host loop with fit-based early stopping (as in the paper's setup).
+The MTTKRP bottleneck (line 11) runs through the execution-plan layer
+(`core.plan`): the plan resolves the paper's adaptive heuristics into a
+concrete kernel per mode — pure-jnp reference traversals by default on CPU,
+Pallas kernels (interpret on CPU, Mosaic on TPU) when the plan says so.
+Gram matrices, the pseudo-inverse solve, and normalization are dense JAX.
+One full sweep over all modes is a single jitted function; the outer
+iteration is a host loop with fit-based early stopping (as in the paper's
+setup).
+
+Fit tracking: the sweep returns the MTTKRP of its *last* mode update — the
+one matrix for which ``<X, X̂> = Σ_r λ_r <A_n[:,r], M[:,r]>`` holds exactly
+(every other mode's MTTKRP is stale by the end of the sweep, computed
+against factors that were subsequently overwritten). The Kolda–Bader
+residual identity ``||X-X̂||² = ||X||² + ||X̂||² − 2<X,X̂>`` is then
+evaluated on the host in float64: near convergence the three terms agree to
+~1e-5 relative, so combining them in float32 inside the jitted sweep left
+cancellation noise (~1e-3 in fit units) larger than the per-iteration fit
+gain and the reported fit sequence was not monotone even though the
+iterates were.
 """
 from __future__ import annotations
 
@@ -15,8 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import heuristics
-from repro.core.alto import AltoTensor, OrientedView, oriented_view
+from repro.core import plan as plan_mod
+from repro.core.alto import AltoTensor, OrientedView
 from repro.core.mttkrp import mttkrp_adaptive
 
 
@@ -26,6 +41,7 @@ class CpalsResult:
     factors: list[jnp.ndarray]       # per-mode (I_n, R)
     fits: list[float]                # fit per iteration
     n_iters: int
+    plan: plan_mod.ExecutionPlan | None = None
 
 
 def init_factors(dims: Sequence[int], rank: int, seed: int = 0,
@@ -35,29 +51,33 @@ def init_factors(dims: Sequence[int], rank: int, seed: int = 0,
             for k, I in zip(keys, dims)]
 
 
-def build_views(at: AltoTensor) -> dict[int, OrientedView]:
-    """Oriented views only for modes the heuristic routes that way
+def build_views(at: AltoTensor,
+                plan: plan_mod.ExecutionPlan | None = None
+                ) -> dict[int, OrientedView]:
+    """Oriented views only for modes the plan routes that way
     (keeps the single-copy property for high-reuse tensors)."""
-    views = {}
-    for n in range(len(at.dims)):
-        if (heuristics.choose_traversal(at.meta, n)
-                is heuristics.Traversal.OUTPUT_ORIENTED):
-            views[n] = oriented_view(at, n)
-    return views
+    if plan is None:
+        plan = plan_mod.make_plan(at.meta, rank=1)  # traversal is rank-free
+    return plan_mod.build_views(at, plan)
 
 
-def _sweep(at: AltoTensor, views, factors, lam, normX2):
-    """One CP-ALS sweep over all modes; returns factors, lam, fit."""
+def _sweep(plan, at: AltoTensor, views, factors, lam):
+    """One CP-ALS sweep over all modes.
+
+    Returns (factors, lam, M_last): M_last is the final mode's MTTKRP, the
+    only one consistent with the returned factors — the host-side fit
+    evaluation depends on it being fresh, not reused from earlier modes.
+    """
     N = len(factors)
     grams = [A.T @ A for A in factors]
-    mttkrp_last = None
+    M = None
     for n in range(N):
         V = None
         for m in range(N):
             if m == n:
                 continue
             V = grams[m] if V is None else V * grams[m]
-        M = mttkrp_adaptive(at, views, factors, n)        # (I_n, R)
+        M = mttkrp_adaptive(at, views, factors, n, plan=plan)  # (I_n, R)
         A = M @ jnp.linalg.pinv(V)
         lam = jnp.linalg.norm(A, axis=0)
         lam = jnp.where(lam > 0, lam, 1.0)
@@ -65,44 +85,54 @@ def _sweep(at: AltoTensor, views, factors, lam, normX2):
         factors = list(factors)
         factors[n] = A
         grams[n] = A.T @ A
-        mttkrp_last = (M, n)
+    return factors, lam, M
 
-    # Fit (Kolda & Bader): ||X - X̂||² = ||X||² + ||X̂||² - 2<X, X̂>
-    M, n = mttkrp_last
-    inner = jnp.sum(jnp.sum(factors[n] * M, axis=0) * lam)
-    Vall = None
-    for m in range(N):
-        Vall = grams[m] if Vall is None else Vall * grams[m]
-    norm_model2 = jnp.sum(jnp.outer(lam, lam) * Vall)
-    resid2 = jnp.maximum(normX2 + norm_model2 - 2.0 * inner, 0.0)
-    fit = 1.0 - jnp.sqrt(resid2) / jnp.sqrt(normX2)
-    return factors, lam, fit
+
+def _fit_host(M_last, factors, lam, normX2: float) -> float:
+    """Kolda–Bader fit from sweep-consistent state, in host float64."""
+    n = len(factors) - 1
+    fs = [np.asarray(A, np.float64) for A in factors]
+    lam64 = np.asarray(lam, np.float64)
+    M = np.asarray(M_last, np.float64)
+    inner = float(((fs[n] * M).sum(axis=0) * lam64).sum())
+    V = np.ones((lam64.size, lam64.size))
+    for A in fs:
+        V *= A.T @ A
+    norm_model2 = float((np.outer(lam64, lam64) * V).sum())
+    resid2 = max(normX2 + norm_model2 - 2.0 * inner, 0.0)
+    return float(1.0 - np.sqrt(resid2) / np.sqrt(normX2))
 
 
 def cp_als(at: AltoTensor, rank: int, n_iters: int = 50, tol: float = 1e-5,
            seed: int = 0, views: dict[int, OrientedView] | None = None,
-           factors: list[jnp.ndarray] | None = None) -> CpalsResult:
+           factors: list[jnp.ndarray] | None = None,
+           plan: plan_mod.ExecutionPlan | None = None) -> CpalsResult:
+    if plan is None:
+        plan = plan_mod.make_plan(at.meta, rank)
+    elif plan.rank != rank:
+        raise ValueError(f"plan was built for rank {plan.rank}, "
+                         f"cp_als called with rank {rank}")
     if factors is None:
         factors = init_factors(at.dims, rank, seed=seed,
                                dtype=at.values.dtype)
     if views is None:
-        views = build_views(at)
+        views = plan_mod.build_views(at, plan)
     lam = jnp.ones((rank,), dtype=at.values.dtype)
-    normX2 = jnp.sum(at.values.astype(jnp.float32) ** 2)
+    normX2 = float((np.asarray(at.values, np.float64) ** 2).sum())
 
-    sweep = jax.jit(_sweep)
+    sweep = jax.jit(functools.partial(_sweep, plan))
     fits: list[float] = []
     prev_fit = -np.inf
     it = 0
     for it in range(1, n_iters + 1):
-        factors, lam, fit = sweep(at, views, factors, lam, normX2)
-        fit = float(fit)
+        factors, lam, M_last = sweep(at, views, factors, lam)
+        fit = _fit_host(M_last, factors, lam, normX2)
         fits.append(fit)
         if abs(fit - prev_fit) < tol:
             break
         prev_fit = fit
     return CpalsResult(lam=lam, factors=list(factors), fits=fits,
-                       n_iters=it)
+                       n_iters=it, plan=plan)
 
 
 def reconstruct_values(coords: jnp.ndarray, lam: jnp.ndarray,

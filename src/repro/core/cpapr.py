@@ -24,10 +24,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import heuristics
-from repro.core.alto import (AltoTensor, OrientedView, delinearize,
-                             oriented_view)
-from repro.core.mttkrp import (krp_rows, row_reduce_oriented,
-                               row_reduce_recursive)
+from repro.core import plan as plan_mod
+from repro.core.alto import AltoTensor, OrientedView, delinearize
+from repro.core.mttkrp import krp_rows
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +50,7 @@ class CpaprResult:
     n_inner_total: int
     pi_policy: str
     traversals: list[str]
+    plan: plan_mod.ExecutionPlan | None = None
 
 
 def init_factors(dims: Sequence[int], rank: int, seed: int = 0,
@@ -74,7 +74,8 @@ def _phi(rows, vals, krp, B, eps):
 
 def _mode_update(at: AltoTensor, view: OrientedView | None, mode: int,
                  lam, factors, phi_prev, first_outer: bool,
-                 pre_pi: bool, p: CpaprParams):
+                 pre_pi: bool, p: CpaprParams,
+                 plan: plan_mod.ExecutionPlan):
     """One full Alg. 2 mode update (lines 4-15), jit-able."""
     A = factors[mode]
     # Line 4: inadmissible-zero adjustment (skipped on the first outer iter).
@@ -84,23 +85,21 @@ def _mode_update(at: AltoTensor, view: OrientedView | None, mode: int,
         S = jnp.where((A < p.kappa_tol) & (phi_prev > 1.0), p.kappa, 0.0)
     B0 = (A + S) * lam[None, :]                       # line 5: B = (A+S)Λ
 
-    use_oriented = view is not None
-    if use_oriented:
-        rows, vals, words = view.rows, view.values, view.words
-    else:
-        words, vals = at.words, at.values
-        rows = delinearize(at.meta.enc, words)[:, mode]
-
-    coords = delinearize(at.meta.enc, words)
     if pre_pi:
-        pi = krp_rows(coords, factors, mode)          # line 6 (Π, M×R rows)
+        # Line 6 (Π, M×R rows) in the element order the plan's traversal
+        # will consume (oriented modes read the view-permuted stream).
+        oriented = (view is not None
+                    and plan.modes[mode].traversal
+                    is heuristics.Traversal.OUTPUT_ORIENTED)
+        words = view.words if oriented else at.words
+        coords = delinearize(at.meta.enc, words)
+        pi = krp_rows(coords, factors, mode)
 
-    def phi_of(B):
-        krp = pi if pre_pi else krp_rows(coords, factors, mode)  # line 9
-        contrib = _phi(rows, vals, krp, B, p.eps_div)
-        if use_oriented:
-            return row_reduce_oriented(view, contrib)
-        return row_reduce_recursive(at, mode, contrib)
+    def phi_of(B):                                    # lines 8-9
+        return plan_mod.execute_phi(
+            plan, at, view, B, mode,
+            factors=None if pre_pi else factors,
+            pi=pi if pre_pi else None, eps=p.eps_div)
 
     def inner(carry, _):
         B, done, n_inner = carry
@@ -139,29 +138,38 @@ def log_likelihood(at: AltoTensor, lam, factors, eps=1e-10):
 def cp_apr(at: AltoTensor, rank: int, params: CpaprParams | None = None,
            seed: int = 0, pi_policy: str | None = None,
            views: dict[int, OrientedView] | None = None,
-           track_ll: bool = False) -> CpaprResult:
-    """CP-APR MU driver (Alg. 2). `pi_policy`: None=adaptive|'pre'|'otf'."""
+           track_ll: bool = False,
+           plan: plan_mod.ExecutionPlan | None = None) -> CpaprResult:
+    """CP-APR MU driver (Alg. 2). `pi_policy`: None=adaptive|'pre'|'otf'.
+
+    All kernel routing (traversal per mode, Π policy, jnp vs Pallas) comes
+    from ``plan``; the default plan resolves the paper heuristics with the
+    reference backend on CPU and the Pallas backend on TPU.
+    """
     p = params or CpaprParams()
     N = len(at.dims)
     total = float(jnp.sum(at.values))
     lam, factors = init_factors(at.dims, rank, seed=seed, total=total,
                                 dtype=at.values.dtype)
 
+    if plan is None:
+        plan = plan_mod.make_plan(at.meta, rank)
+    elif plan.rank != rank:
+        raise ValueError(f"plan was built for rank {plan.rank}, "
+                         f"cp_apr called with rank {rank}")
     if pi_policy is None:
-        pi_policy = heuristics.choose_pi_policy(at.meta, rank).value
+        pi_policy = plan.pi_policy.value
     pre_pi = pi_policy == "pre"
 
     if views is None:
-        views = {}
-        for n in range(N):
-            if (heuristics.choose_traversal(at.meta, n)
-                    is heuristics.Traversal.OUTPUT_ORIENTED):
-                views[n] = oriented_view(at, n)
-    traversals = ["oriented" if n in views else "recursive"
-                  for n in range(N)]
+        views = plan_mod.build_views(at, plan)
+    traversals = ["oriented" if (n in views and plan.modes[n].traversal
+                                 is heuristics.Traversal.OUTPUT_ORIENTED)
+                  else "recursive" for n in range(N)]
 
     update = jax.jit(_mode_update,
-                     static_argnames=("mode", "first_outer", "pre_pi", "p"))
+                     static_argnames=("mode", "first_outer", "pre_pi", "p",
+                                      "plan"))
 
     phi_prev = [jnp.zeros_like(A) for A in factors]
     kkt_hist: list[float] = []
@@ -174,7 +182,7 @@ def cp_apr(at: AltoTensor, rank: int, params: CpaprParams | None = None,
         for n in range(N):
             A, lam, phi_n, conv, n_inner, kkt = update(
                 at, views.get(n), n, lam, factors, phi_prev[n],
-                first_outer=(outer == 1), pre_pi=pre_pi, p=p)
+                first_outer=(outer == 1), pre_pi=pre_pi, p=p, plan=plan)
             factors = list(factors)
             factors[n] = A
             phi_prev[n] = phi_n
@@ -189,4 +197,4 @@ def cp_apr(at: AltoTensor, rank: int, params: CpaprParams | None = None,
     return CpaprResult(lam=lam, factors=factors, kkt_violations=kkt_hist,
                        log_likelihoods=ll_hist, n_outer=outer,
                        n_inner_total=n_inner_total, pi_policy=pi_policy,
-                       traversals=traversals)
+                       traversals=traversals, plan=plan)

@@ -121,9 +121,18 @@ def mttkrp_oriented(view: OrientedView, factors: Sequence[jnp.ndarray]
 
 def mttkrp_adaptive(at: AltoTensor,
                     views: dict[int, OrientedView] | None,
-                    factors: Sequence[jnp.ndarray], mode: int
-                    ) -> jnp.ndarray:
-    """Adaptive conflict resolution (paper §4.2), selected at trace time."""
+                    factors: Sequence[jnp.ndarray], mode: int,
+                    plan=None) -> jnp.ndarray:
+    """Adaptive conflict resolution (paper §4.2), selected at trace time.
+
+    With a ``plan`` (see `core.plan.make_plan`) the resolved kernel routing
+    is used — including the Pallas backends; without one, the heuristic
+    picks between the two pure-jnp traversals below (the plan layer's
+    reference backend).
+    """
+    if plan is not None:
+        from repro.core import plan as plan_mod
+        return plan_mod.execute_mttkrp(plan, at, views, factors, mode)
     choice = heuristics.choose_traversal(at.meta, mode)
     if (choice is heuristics.Traversal.OUTPUT_ORIENTED and views
             and mode in views):

@@ -1,0 +1,271 @@
+"""Execution plans: resolve the paper's adaptive heuristics into kernels.
+
+The paper (§4.2/§4.3, Table 1) selects a traversal (recursive vs
+output-oriented) and a Π policy (PRE vs OTF) per tensor/mode at runtime.
+On the JAX/TPU target every such decision must be *static* — jit control
+flow cannot branch on data — so this module turns the heuristics plus the
+tensor's static metadata (`AltoMeta`) into an :class:`ExecutionPlan`: a
+frozen, hashable description of exactly which compiled kernel variant runs
+for every (mode, rank) combination, with all block sizes resolved.
+
+The plan answers three questions the call sites used to guess at:
+
+  * **traversal** per mode — `heuristics.choose_traversal` (fiber reuse vs
+    the 4-memory-op buffered accumulation cost, §4.2);
+  * **rank blocking** (`r_block`) and **nonzero blocking** (`block_m`) —
+    chosen so the Pallas kernel's per-grid-step VMEM footprint fits the
+    accelerator budget, from `AltoMeta` (temp_rows, dims, dtype) instead of
+    the caller hand-picking tile sizes;
+  * **backend** — "pallas" (interpret-mode on CPU, Mosaic on TPU) or
+    "reference" (the pure-jnp traversals in `core.mttkrp`, retained as the
+    plan's always-available oracle backend).
+
+Because `ExecutionPlan` is hashable it can travel as a static jit argument
+and doubles as the key of the compiled-executable cache in `kernels.ops`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import heuristics
+from repro.core import mttkrp as core_mttkrp
+from repro.core.alto import AltoMeta, AltoTensor, OrientedView, delinearize
+
+# Per-core VMEM on current TPU generations; the budget is what the kernel's
+# per-grid-step working set must fit into (interpret mode ignores it but we
+# size identically so CPU tests exercise the TPU tiling decisions).
+VMEM_BYTES = 16 * 1024 * 1024
+
+# Output-oriented kernel: the in-block one-hot segment matmul is
+# (block_m, block_m), so block_m is capped independently of the budget.
+MAX_BLOCK_M = 1024
+MIN_BLOCK_M = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class ModePlan:
+    """Resolved execution choices for one target mode."""
+    mode: int
+    traversal: heuristics.Traversal
+    r_block: int        # rank tile (always divides the plan rank)
+    block_m: int        # oriented-kernel nonzero block (power of two)
+    temp_rows: int      # recursive Temp height (static VMEM bound)
+    vmem_bytes: int     # estimated per-grid-step footprint of the choice
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Static per-(tensor, rank) kernel routing, hashable for jit/caching."""
+    meta: AltoMeta
+    rank: int
+    backend: str                       # "pallas" | "reference"
+    interpret: bool | None             # None = auto (non-TPU -> interpret)
+    pi_policy: heuristics.PiPolicy
+    modes: tuple[ModePlan, ...]
+
+    def mode_plan(self, mode: int) -> ModePlan:
+        return self.modes[mode]
+
+    def traversals(self) -> tuple[str, ...]:
+        return tuple(m.traversal.value for m in self.modes)
+
+
+# ---------------------------------------------------------------------------
+# VMEM budgeting
+# ---------------------------------------------------------------------------
+
+def _chunk_rows(meta: AltoMeta) -> int:
+    """Per-partition element count after build()'s padding to L·chunk."""
+    L = meta.n_partitions
+    return -(-max(meta.nnz, L) // L)
+
+def recursive_vmem_bytes(meta: AltoMeta, mode: int, r_block: int,
+                         dtype_bytes: int = 4) -> int:
+    """Per-grid-step VMEM of the recursive (Temp + one-hot) kernel.
+
+    words + values tiles, the (chunk, T) one-hot operand, the (chunk, rb)
+    Khatri-Rao/contribution tile, the (T, rb) Temp output, and the resident
+    factor tiles of the other modes.
+    """
+    chunk = _chunk_rows(meta)
+    T = meta.temp_rows[mode]
+    W = meta.enc.n_words
+    words = chunk * W * 4
+    values = chunk * dtype_bytes
+    onehot = chunk * T * dtype_bytes
+    contrib = chunk * r_block * dtype_bytes
+    temp = T * r_block * dtype_bytes
+    factors = sum(I for m, I in enumerate(meta.dims)
+                  if m != mode) * r_block * dtype_bytes
+    return words + values + onehot + contrib + temp + factors
+
+
+def oriented_vmem_bytes(meta: AltoMeta, mode: int, block_m: int,
+                        r_block: int, dtype_bytes: int = 4) -> int:
+    """Per-grid-step VMEM of the output-oriented segment kernel.
+
+    Dominated by the (block_m, block_m) in-block segment one-hot; plus the
+    sorted rows / words / values tiles, the contribution tile, the
+    per-block segment-sum output, and the resident factor tiles.
+    """
+    W = meta.enc.n_words
+    words = block_m * W * 4
+    rows = block_m * 4
+    values = block_m * dtype_bytes
+    onehot = block_m * block_m * dtype_bytes
+    contrib = 2 * block_m * r_block * dtype_bytes   # krp + segment sums
+    factors = sum(I for m, I in enumerate(meta.dims)
+                  if m != mode) * r_block * dtype_bytes
+    return words + rows + values + onehot + contrib + factors
+
+
+def _divisors_desc(n: int) -> list[int]:
+    out = [d for d in range(1, n + 1) if n % d == 0]
+    return out[::-1]
+
+
+def choose_rank_block(meta: AltoMeta, mode: int, rank: int,
+                      dtype_bytes: int = 4,
+                      vmem_limit: int = VMEM_BYTES) -> int:
+    """Largest divisor of ``rank`` whose recursive footprint fits VMEM.
+
+    Always returns a divisor, so `ops.mttkrp` never sees a partial rank
+    tile; if even r_block=1 overflows (huge Temp intervals) the budget is
+    advisory and 1 is returned — the kernel still compiles, just spills.
+    """
+    for rb in _divisors_desc(rank):
+        if recursive_vmem_bytes(meta, mode, rb, dtype_bytes) <= vmem_limit:
+            return rb
+    return 1
+
+
+def choose_block_m(meta: AltoMeta, mode: int, r_block: int,
+                   dtype_bytes: int = 4,
+                   vmem_limit: int = VMEM_BYTES) -> int:
+    """Largest power-of-two nonzero block for the oriented kernel.
+
+    The oriented stream is padded to a multiple of block_m by `ops`, so the
+    choice is free of divisibility constraints on nnz.
+    """
+    bm = MAX_BLOCK_M
+    while bm > MIN_BLOCK_M and oriented_vmem_bytes(
+            meta, mode, bm, r_block, dtype_bytes) > vmem_limit:
+        bm //= 2
+    return bm
+
+
+# ---------------------------------------------------------------------------
+# Plan construction
+# ---------------------------------------------------------------------------
+
+def default_backend() -> str:
+    """Pallas/Mosaic on TPU; pure-jnp reference elsewhere (the interpreted
+    Pallas path stays available by passing backend="pallas" explicitly)."""
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+def make_plan(meta: AltoMeta, rank: int, *, backend: str | None = None,
+              interpret: bool | None = None, dtype_bytes: int = 4,
+              vmem_limit: int = VMEM_BYTES,
+              fast_mem_bytes: int = heuristics.DEFAULT_FAST_MEM_BYTES
+              ) -> ExecutionPlan:
+    """Resolve heuristics + static meta into a concrete execution plan."""
+    backend = backend or default_backend()
+    if backend not in ("pallas", "reference"):
+        raise ValueError(f"unknown backend {backend!r}")
+    modes = []
+    for n in range(meta.enc.ndim):
+        traversal = heuristics.choose_traversal(meta, n)
+        rb = choose_rank_block(meta, n, rank, dtype_bytes, vmem_limit)
+        bm = choose_block_m(meta, n, rb, dtype_bytes, vmem_limit)
+        vm = (recursive_vmem_bytes(meta, n, rb, dtype_bytes)
+              if traversal is heuristics.Traversal.RECURSIVE
+              else oriented_vmem_bytes(meta, n, bm, rb, dtype_bytes))
+        modes.append(ModePlan(mode=n, traversal=traversal, r_block=rb,
+                              block_m=bm, temp_rows=meta.temp_rows[n],
+                              vmem_bytes=vm))
+    pi_policy = heuristics.choose_pi_policy(
+        meta, rank, value_bytes=dtype_bytes, fast_mem_bytes=fast_mem_bytes)
+    return ExecutionPlan(meta=meta, rank=rank, backend=backend,
+                         interpret=interpret, pi_policy=pi_policy,
+                         modes=tuple(modes))
+
+
+def plan_for(at: AltoTensor, rank: int, **kwargs) -> ExecutionPlan:
+    return make_plan(at.meta, rank, **kwargs)
+
+
+def build_views(at: AltoTensor, plan: ExecutionPlan
+                ) -> dict[int, OrientedView]:
+    """Oriented-traversal copies for exactly the modes the plan routes
+    output-oriented (preserves the single-copy property elsewhere)."""
+    from repro.core.alto import oriented_view
+    return {m.mode: oriented_view(at, m.mode) for m in plan.modes
+            if m.traversal is heuristics.Traversal.OUTPUT_ORIENTED}
+
+
+# ---------------------------------------------------------------------------
+# Plan-directed execution (the single entry point the drivers use)
+# ---------------------------------------------------------------------------
+
+def execute_mttkrp(plan: ExecutionPlan, at: AltoTensor,
+                   views: dict[int, OrientedView] | None,
+                   factors, mode: int) -> jnp.ndarray:
+    """MTTKRP for one mode through the plan's kernel choice.
+
+    Falls back to the recursive traversal when the plan says oriented but
+    no view was materialized (same contract as `mttkrp_adaptive`).
+    """
+    mp = plan.modes[mode]
+    oriented = (mp.traversal is heuristics.Traversal.OUTPUT_ORIENTED
+                and views is not None and mode in views)
+    if plan.backend == "pallas":
+        from repro.kernels import ops
+        if oriented:
+            return ops.mttkrp_oriented(views[mode], factors,
+                                       block_m=mp.block_m,
+                                       r_block=mp.r_block,
+                                       interpret=plan.interpret)
+        return ops.mttkrp(at, factors, mode, r_block=mp.r_block,
+                          interpret=plan.interpret)
+    if oriented:
+        return core_mttkrp.mttkrp_oriented(views[mode], factors)
+    return core_mttkrp.mttkrp_recursive(at, factors, mode)
+
+
+def execute_phi(plan: ExecutionPlan, at: AltoTensor,
+                view: OrientedView | None, B: jnp.ndarray, mode: int,
+                factors=None, pi: jnp.ndarray | None = None,
+                eps: float = 1e-10) -> jnp.ndarray:
+    """CP-APR Φ row reduction through the plan's kernel choice.
+
+    Pass ``pi`` (view/ALTO-ordered Khatri-Rao rows) for ALTO-PRE or
+    ``factors`` for ALTO-OTF — exactly one, as in `kernels.cpapr_phi`.
+    """
+    if (pi is None) == (factors is None):
+        raise ValueError("pass exactly one of pi= / factors=")
+    mp = plan.modes[mode]
+    oriented = (mp.traversal is heuristics.Traversal.OUTPUT_ORIENTED
+                and view is not None)
+    if plan.backend == "pallas":
+        from repro.kernels import ops
+        if oriented:
+            return ops.cpapr_phi_oriented(view, B, factors=factors, pi=pi,
+                                          eps=eps, block_m=mp.block_m,
+                                          interpret=plan.interpret)
+        return ops.cpapr_phi(at, B, mode, factors=factors, pi=pi, eps=eps,
+                             interpret=plan.interpret)
+    # reference backend: pure-jnp traversals
+    words = view.words if oriented else at.words
+    vals = view.values if oriented else at.values
+    coords = delinearize(plan.meta.enc, words)
+    krp = pi if pi is not None else core_mttkrp.krp_rows(coords, factors,
+                                                         mode)
+    denom = jnp.maximum(jnp.sum(B[coords[:, mode]] * krp, axis=-1), eps)
+    contrib = (vals / denom)[:, None] * krp
+    if oriented:
+        return core_mttkrp.row_reduce_oriented(view, contrib)
+    return core_mttkrp.row_reduce_recursive(at, mode, contrib)

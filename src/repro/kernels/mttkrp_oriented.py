@@ -1,0 +1,212 @@
+"""Pallas TPU kernel: output-oriented MTTKRP / Φ segment reduction.
+
+The complement of the recursive one-hot-MXU kernel in `kernels/mttkrp.py`
+(paper §4.2, Fig. 8 right): nonzeros arrive permuted into ascending order
+of the target-mode row (`core.alto.oriented_view`), so conflict-free
+updates become a *sorted segment reduction*. This mirrors the conflict-free
+segment-reduction designs of ALTO (arXiv:2102.10245) and Dynasor
+(arXiv:2309.09131), adapted to the TPU's no-atomics execution model:
+
+  * the sorted row stream is cut into `block_m`-element blocks (one grid
+    step each — a blocked scan over the sorted rows);
+  * within a block, segment ids are the run-rank of each row
+    (``cumsum(rows[i] != rows[i-1])``, a VPU prefix scan), and the segment
+    sums are formed by ONE one-hot matmul on the MXU —
+    ``onehot(seg).T @ contrib`` — exactly like the recursive kernel's Temp
+    scatter but indexed by run rank instead of partition-interval offset,
+    so the operand is (block_m, block_m) regardless of the mode length;
+  * a row whose run crosses a block boundary yields one partial sum in
+    each adjacent block; the boundary carry is merged outside the kernel
+    by `ops._segment_merge`, which scatters every block's segment sums to
+    their global rows (at most one shared row per boundary — the paper's
+    "atomics only at partition boundaries", pull-based).
+
+The Φ variant fuses the CP-APR model-update arithmetic (B-row gather,
+denominator dot, Poisson elementwise update — paper Alg. 5) ahead of the
+same segment reduction, for both Π policies (ALTO-PRE / ALTO-OTF).
+
+VMEM per grid step (f32): block_m·(W + 2 + 2·r_block + block_m) +
+Σ_{m≠mode} I_m·r_block words — `core.plan.choose_block_m` sizes block_m so
+this fits the 16 MB budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.encoding import AltoEncoding
+from repro.kernels.mttkrp import _decode
+
+DEFAULT_BLOCK_M = 256
+
+
+def run_rank_segments(rows):
+    """Run-rank segment ids along the last axis of a sorted row array.
+
+    Shared between the kernels and `ops._segment_merge`: the merge's
+    scatter map must reproduce this segmentation bit-for-bit, so there is
+    exactly one implementation.
+    """
+    block_m = rows.shape[-1]
+    idx = jax.lax.iota(jnp.int32, block_m)
+    prev = jnp.roll(rows, 1, axis=-1)
+    is_new = jnp.where(idx == 0, 0, (rows != prev).astype(jnp.int32))
+    return jnp.cumsum(is_new, axis=-1)
+
+
+def _block_segments(rows):
+    """Kernel-side: segment ids + lane iota of a (block_m,) row vector."""
+    return run_rank_segments(rows), jax.lax.iota(jnp.int32, rows.shape[0])
+
+
+def _segment_matmul(seg, idx, contrib):
+    """Per-segment sums via one one-hot matmul: (block_m, r_block)."""
+    onehot = (seg[:, None] == idx[None, :]).astype(contrib.dtype)
+    return jax.lax.dot_general(
+        onehot, contrib, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(contrib.dtype)
+
+
+def _mttkrp_oriented_kernel(enc: AltoEncoding, mode: int,
+                            rows_ref, words_ref, vals_ref, *refs):
+    """Grid step: one (nonzero block, rank tile) -> in-block segment sums."""
+    factor_refs = refs[:-1]
+    out_ref = refs[-1]
+    rows = rows_ref[...]                      # (block_m,) ascending
+    words = words_ref[...]                    # (block_m, W)
+    vals = vals_ref[...]                      # (block_m,)
+    coords = _decode(enc, words)              # N × (block_m,)
+
+    krp = None                                # Khatri-Rao rows (block_m, rb)
+    fi = 0
+    for m in range(enc.ndim):
+        if m == mode:
+            continue
+        gathered = jnp.take(factor_refs[fi][...], coords[m], axis=0)
+        krp = gathered if krp is None else krp * gathered
+        fi += 1
+    contrib = vals[:, None] * krp             # (block_m, rb)
+
+    seg, idx = _block_segments(rows)
+    out_ref[0] = _segment_matmul(seg, idx, contrib)
+
+
+def mttkrp_oriented_partials_pallas(enc: AltoEncoding, mode: int,
+                                    rows: jnp.ndarray, words: jnp.ndarray,
+                                    values: jnp.ndarray, factors,
+                                    block_m: int = DEFAULT_BLOCK_M,
+                                    r_block: int | None = None,
+                                    interpret: bool = True) -> jnp.ndarray:
+    """Per-block segment sums: (n_blocks, block_m, R).
+
+    ``rows``/``words``/``values`` must be in oriented (row-sorted) order
+    with length a multiple of ``block_m`` (ops pads). Segment slot j of
+    block b holds the sum of the j-th distinct-row run inside that block;
+    `ops._segment_merge` scatters the slots to global rows and thereby
+    merges boundary carries.
+    """
+    M, W = words.shape
+    if M % block_m:
+        raise ValueError(f"nnz {M} not a multiple of block_m {block_m}")
+    n_blocks = M // block_m
+    R = factors[0].shape[1]
+    rb = r_block or R
+    if R % rb:
+        raise ValueError(f"rank {R} not a multiple of r_block {rb}")
+    others = [f for m, f in enumerate(factors) if m != mode]
+
+    in_specs = [
+        pl.BlockSpec((block_m,), lambda b, r: (b,)),           # rows
+        pl.BlockSpec((block_m, W), lambda b, r: (b, 0)),       # words
+        pl.BlockSpec((block_m,), lambda b, r: (b,)),           # values
+    ] + [
+        pl.BlockSpec((f.shape[0], rb), lambda b, r: (0, r)) for f in others
+    ]
+    return pl.pallas_call(
+        functools.partial(_mttkrp_oriented_kernel, enc, mode),
+        grid=(n_blocks, R // rb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, block_m, rb), lambda b, r: (b, 0, r)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, block_m, R),
+                                       factors[0].dtype),
+        interpret=interpret,
+    )(rows, words, values, *others)
+
+
+def _phi_oriented_kernel(enc: AltoEncoding, mode: int, eps: float,
+                         pre_pi: bool,
+                         rows_ref, words_ref, vals_ref, b_ref, *refs):
+    """Grid step: fused Φ update + in-block segment sums (full rank)."""
+    out_ref = refs[-1]
+    rows = rows_ref[...]
+    vals = vals_ref[...]
+
+    if pre_pi:
+        krp = refs[0][...]                    # Π rows (block_m, R)
+    else:
+        # OTF only: the index decode is dead work under ALTO-PRE.
+        coords = _decode(enc, words_ref[...])
+        krp = None
+        fi = 0
+        for m in range(enc.ndim):
+            if m == mode:
+                continue
+            gathered = jnp.take(refs[fi][...], coords[m], axis=0)
+            krp = gathered if krp is None else krp * gathered
+            fi += 1
+
+    b_rows = jnp.take(b_ref[...], rows, axis=0)        # (block_m, R)
+    denom = jnp.maximum(jnp.sum(b_rows * krp, axis=-1), eps)
+    contrib = (vals / denom)[:, None] * krp
+
+    seg, idx = _block_segments(rows)
+    out_ref[0] = _segment_matmul(seg, idx, contrib)
+
+
+def phi_oriented_partials_pallas(enc: AltoEncoding, mode: int, eps: float,
+                                 rows: jnp.ndarray, words: jnp.ndarray,
+                                 values: jnp.ndarray, B: jnp.ndarray,
+                                 factors=None, pi: jnp.ndarray | None = None,
+                                 block_m: int = DEFAULT_BLOCK_M,
+                                 interpret: bool = True) -> jnp.ndarray:
+    """Per-block Φ segment sums: (n_blocks, block_m, R).
+
+    Pass ``pi`` (oriented-order Khatri-Rao rows) for ALTO-PRE or
+    ``factors`` for ALTO-OTF (exactly one). No rank tiling — the
+    denominator ``<B[i_n,:], krp>`` needs the full rank per element.
+    """
+    pre_pi = pi is not None
+    if pre_pi == (factors is not None):
+        raise ValueError("pass exactly one of pi= / factors=")
+    M, W = words.shape
+    if M % block_m:
+        raise ValueError(f"nnz {M} not a multiple of block_m {block_m}")
+    n_blocks = M // block_m
+    R = B.shape[1]
+
+    in_specs = [
+        pl.BlockSpec((block_m,), lambda b: (b,)),              # rows
+        pl.BlockSpec((block_m, W), lambda b: (b, 0)),          # words
+        pl.BlockSpec((block_m,), lambda b: (b,)),              # values
+        pl.BlockSpec(B.shape, lambda b: (0, 0)),               # B
+    ]
+    args = [rows, words, values, B]
+    if pre_pi:
+        in_specs.append(pl.BlockSpec((block_m, R), lambda b: (b, 0)))
+        args.append(pi)
+    else:
+        others = [f for m, f in enumerate(factors) if m != mode]
+        in_specs += [pl.BlockSpec(f.shape, lambda b: (0, 0)) for f in others]
+        args += others
+
+    return pl.pallas_call(
+        functools.partial(_phi_oriented_kernel, enc, mode, eps, pre_pi),
+        grid=(n_blocks,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, block_m, R), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, block_m, R), B.dtype),
+        interpret=interpret,
+    )(*args)

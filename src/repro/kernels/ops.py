@@ -1,21 +1,30 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Jit'd public wrappers around the Pallas kernels, with executable caching.
 
 On the CPU test host every kernel runs with interpret=True (the Pallas
-interpreter executes the kernel body in Python); on TPU the same call sites
-compile to Mosaic. `interpret=None` auto-detects.
+interpreter traces the kernel body into regular XLA); on TPU the same call
+sites compile to Mosaic. `interpret=None` auto-detects.
+
+Every wrapper resolves to a **cached jitted executable** keyed on the
+tensor's static metadata (`AltoMeta` is frozen/hashable) plus the static
+kernel parameters (mode, block sizes, interpret flag). Before this cache
+each call built a fresh closure and `jax.jit` object, so XLA re-traced and
+re-compiled the kernel on *every* invocation — per sweep, per mode, per
+iteration. Now the first call per (meta, mode, tiling) compiles once and
+subsequent calls hit jit's C++ fast path.
 """
 from __future__ import annotations
 
-import functools
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.alto import AltoTensor
+from repro.core.alto import AltoTensor, OrientedView
 from repro.core.encoding import AltoEncoding
 from repro.kernels import cpapr_phi as _phi
 from repro.kernels import delinearize as _delin
 from repro.kernels import mttkrp as _mttkrp
+from repro.kernels import mttkrp_oriented as _oriented
 
 
 def _auto_interpret(interpret):
@@ -24,19 +33,32 @@ def _auto_interpret(interpret):
     return jax.default_backend() != "tpu"
 
 
-def delinearize(enc: AltoEncoding, words: jnp.ndarray,
-                block_m: int = _delin.DEFAULT_BLOCK_M,
-                interpret: bool | None = None) -> jnp.ndarray:
-    """ALTO index words -> int32 coordinates (bit-scatter kernel)."""
-    M = words.shape[0]
-    bm = min(block_m, M)
-    while M % bm:
-        bm -= 1
-    fn = jax.jit(functools.partial(
-        _delin.delinearize_pallas, enc, block_m=bm,
-        interpret=_auto_interpret(interpret)))
-    return fn(words)
+# ---------------------------------------------------------------------------
+# Compiled-executable cache
+# ---------------------------------------------------------------------------
 
+_EXEC_CACHE: dict[tuple, Callable] = {}
+
+
+def _cached_executable(key: tuple, build: Callable[[], Callable]) -> Callable:
+    """Return the jitted executable for ``key``, building it on first use."""
+    fn = _EXEC_CACHE.get(key)
+    if fn is None:
+        fn = _EXEC_CACHE[key] = build()
+    return fn
+
+
+def cache_size() -> int:
+    return len(_EXEC_CACHE)
+
+
+def cache_clear() -> None:
+    _EXEC_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# Reductions shared by the kernels (jnp, fused into the cached executables)
+# ---------------------------------------------------------------------------
 
 def pull_reduction(partials: jnp.ndarray, part_start_mode: jnp.ndarray,
                    out_dim: int) -> jnp.ndarray:
@@ -48,38 +70,168 @@ def pull_reduction(partials: jnp.ndarray, part_start_mode: jnp.ndarray,
     return out.at[rows].add(partials)
 
 
+def _segment_merge(partials: jnp.ndarray, rows: jnp.ndarray,
+                   out_dim: int) -> jnp.ndarray:
+    """Scatter per-block segment sums to global rows (boundary carry merge).
+
+    ``partials`` is (n_blocks, block_m, R) from the oriented kernel; slot j
+    of block b holds the sum of the block's j-th distinct-row run. The
+    global row of that run is recovered from the sorted ``rows`` stream
+    with the same run-rank prefix scan the kernel used. A row whose run
+    spans a block boundary appears as the last segment of one block and
+    the first of the next — both scatter to the same output row, which is
+    exactly the carry merge ("atomics only at partition boundaries").
+    Unused slots carry zero sums and scatter harmlessly to row 0.
+    """
+    nb, bm, R = partials.shape
+    rows_b = rows.reshape(nb, bm)
+    seg = _oriented.run_rank_segments(rows_b)              # (nb, bm)
+    seg_rows = jnp.zeros((nb, bm), jnp.int32).at[
+        jnp.arange(nb)[:, None], seg].set(rows_b)
+    out = jnp.zeros((out_dim, R), partials.dtype)
+    return out.at[seg_rows.reshape(-1)].add(partials.reshape(nb * bm, R))
+
+
+def _pad_oriented(rows, words, values, block_m: int):
+    """Pad the sorted stream to a multiple of block_m.
+
+    Padding replicates the final row/words (stays sorted, same segment)
+    with zero values, so padded elements contribute nothing.
+    """
+    M = rows.shape[0]
+    pad = (-M) % block_m
+    if pad == 0:
+        return rows, words, values
+    rows = jnp.concatenate([rows, jnp.broadcast_to(rows[-1:], (pad,))])
+    words = jnp.concatenate(
+        [words, jnp.broadcast_to(words[-1:], (pad, words.shape[1]))])
+    values = jnp.concatenate(
+        [values, jnp.zeros((pad,), values.dtype)])
+    return rows, words, values
+
+
+# ---------------------------------------------------------------------------
+# Public kernel entry points
+# ---------------------------------------------------------------------------
+
+def delinearize(enc: AltoEncoding, words: jnp.ndarray,
+                block_m: int = _delin.DEFAULT_BLOCK_M,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """ALTO index words -> int32 coordinates (bit-scatter kernel)."""
+    M = words.shape[0]
+    bm = min(block_m, M)
+    while M % bm:
+        bm -= 1
+    interp = _auto_interpret(interpret)
+
+    def build():
+        def run(words):
+            return _delin.delinearize_pallas(enc, words, block_m=bm,
+                                             interpret=interp)
+        return jax.jit(run)
+
+    fn = _cached_executable(("delin", enc, bm, interp), build)
+    return fn(words)
+
+
 def mttkrp(at: AltoTensor, factors, mode: int,
            r_block: int | None = None,
            interpret: bool | None = None) -> jnp.ndarray:
-    """Full MTTKRP: Pallas partials kernel + pull reduction."""
+    """Recursive-traversal MTTKRP: Pallas partials kernel + pull reduction."""
     meta = at.meta
+    interp = _auto_interpret(interpret)
+    rb = r_block or factors[mode].shape[1]
 
-    @jax.jit
-    def run(words, values, part_start, factors):
-        partials = _mttkrp.mttkrp_partials_pallas(
-            meta.enc, mode, meta.temp_rows[mode], words, values, part_start,
-            factors, r_block=r_block, interpret=_auto_interpret(interpret))
-        return pull_reduction(partials, part_start[:, mode],
-                              meta.dims[mode])
+    def build():
+        def run(words, values, part_start, factors):
+            partials = _mttkrp.mttkrp_partials_pallas(
+                meta.enc, mode, meta.temp_rows[mode], words, values,
+                part_start, factors, r_block=rb, interpret=interp)
+            return pull_reduction(partials, part_start[:, mode],
+                                  meta.dims[mode])
+        return jax.jit(run)
 
-    return run(at.words, at.values, at.part_start, list(factors))
+    fn = _cached_executable(("mttkrp_rec", meta, mode, rb, interp), build)
+    return fn(at.words, at.values, at.part_start, list(factors))
+
+
+def mttkrp_oriented(view: OrientedView, factors,
+                    block_m: int = _oriented.DEFAULT_BLOCK_M,
+                    r_block: int | None = None,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """Output-oriented MTTKRP: Pallas segment kernel + boundary merge."""
+    meta = view.meta
+    mode = view.mode
+    interp = _auto_interpret(interpret)
+    rb = r_block or factors[mode].shape[1]
+
+    def build():
+        def run(rows, words, values, factors):
+            rows, words, values = _pad_oriented(rows, words, values,
+                                                block_m)
+            partials = _oriented.mttkrp_oriented_partials_pallas(
+                meta.enc, mode, rows, words, values, factors,
+                block_m=block_m, r_block=rb, interpret=interp)
+            return _segment_merge(partials, rows, meta.dims[mode])
+        return jax.jit(run)
+
+    fn = _cached_executable(
+        ("mttkrp_ori", meta, mode, block_m, rb, interp), build)
+    return fn(view.rows, view.words, view.values, list(factors))
 
 
 def cpapr_phi(at: AltoTensor, B: jnp.ndarray, mode: int,
               factors=None, pi: jnp.ndarray | None = None,
               eps: float = 1e-10,
               interpret: bool | None = None) -> jnp.ndarray:
-    """Full fused Φ update: Pallas partials kernel + pull reduction."""
+    """Recursive-traversal fused Φ: Pallas partials kernel + pull reduction."""
     meta = at.meta
+    interp = _auto_interpret(interpret)
+    pre_pi = pi is not None
 
-    @jax.jit
-    def run(words, values, part_start, B, factors, pi):
-        partials = _phi.phi_partials_pallas(
-            meta.enc, mode, meta.temp_rows[mode], eps, words, values,
-            part_start, B, factors=factors, pi=pi,
-            interpret=_auto_interpret(interpret))
-        return pull_reduction(partials, part_start[:, mode],
-                              meta.dims[mode])
+    def build():
+        def run(words, values, part_start, B, factors, pi):
+            partials = _phi.phi_partials_pallas(
+                meta.enc, mode, meta.temp_rows[mode], eps, words, values,
+                part_start, B, factors=factors, pi=pi, interpret=interp)
+            return pull_reduction(partials, part_start[:, mode],
+                                  meta.dims[mode])
+        return jax.jit(run)
 
-    return run(at.words, at.values, at.part_start, B,
-               list(factors) if factors is not None else None, pi)
+    fn = _cached_executable(
+        ("phi_rec", meta, mode, eps, pre_pi, interp), build)
+    return fn(at.words, at.values, at.part_start, B,
+              list(factors) if factors is not None else None, pi)
+
+
+def cpapr_phi_oriented(view: OrientedView, B: jnp.ndarray,
+                       factors=None, pi: jnp.ndarray | None = None,
+                       eps: float = 1e-10,
+                       block_m: int = _oriented.DEFAULT_BLOCK_M,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """Output-oriented fused Φ: Pallas segment kernel + boundary merge."""
+    meta = view.meta
+    mode = view.mode
+    interp = _auto_interpret(interpret)
+    pre_pi = pi is not None
+
+    def build():
+        def run(rows, words, values, B, factors, pi):
+            if pi is not None:
+                M = rows.shape[0]
+                pad = (-M) % block_m
+                if pad:
+                    pi = jnp.concatenate(
+                        [pi, jnp.zeros((pad, pi.shape[1]), pi.dtype)])
+            rows, words, values = _pad_oriented(rows, words, values,
+                                                block_m)
+            partials = _oriented.phi_oriented_partials_pallas(
+                meta.enc, mode, eps, rows, words, values, B,
+                factors=factors, pi=pi, block_m=block_m, interpret=interp)
+            return _segment_merge(partials, rows, meta.dims[mode])
+        return jax.jit(run)
+
+    fn = _cached_executable(
+        ("phi_ori", meta, mode, eps, pre_pi, block_m, interp), build)
+    return fn(view.rows, view.words, view.values, B,
+              list(factors) if factors is not None else None, pi)

@@ -1,0 +1,197 @@
+"""Hermetic seeded property-test harness (offline stand-in for hypothesis).
+
+The container has no network access, so ``hypothesis`` cannot be installed.
+This module provides the small subset the test-suite uses — ``@given`` with
+keyword strategies, ``@settings``, and a ``strategies`` namespace — with the
+same decorator syntax, backed by a fixed-seed ``numpy`` RNG so every run
+draws the identical example sequence (fully deterministic, fully offline).
+
+Example:
+
+    from proptest import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(dims=st.lists(st.integers(1, 300), min_size=1, max_size=6),
+           seed=st.integers(0, 2**31 - 1))
+    def test_roundtrip(dims, seed):
+        ...
+
+Failures re-raise with the drawn example appended, plus the example index so
+a single case can be replayed via ``PROPTEST_ONLY_EXAMPLE=<idx>``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import zlib
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+_MAX_EXAMPLES_ATTR = "_proptest_max_examples"
+
+
+class Strategy:
+    """A value generator: ``draw(rng) -> value``. Composable via map."""
+
+    def __init__(self, draw: Callable[[np.random.Generator], Any],
+                 label: str = "strategy"):
+        self._draw = draw
+        self.label = label
+
+    def draw(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "Strategy":
+        return Strategy(lambda rng: fn(self._draw(rng)),
+                        f"{self.label}.map")
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"Strategy<{self.label}>"
+
+
+# ---------------------------------------------------------------------------
+# strategies namespace (mirrors hypothesis.strategies' call signatures)
+# ---------------------------------------------------------------------------
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    """Uniform integer in the closed interval [min_value, max_value]."""
+    if min_value > max_value:
+        raise ValueError(f"empty integer range [{min_value}, {max_value}]")
+    return Strategy(
+        lambda rng: int(rng.integers(min_value, max_value, endpoint=True)),
+        f"integers({min_value},{max_value})")
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0) -> Strategy:
+    """Uniform float in [min_value, max_value] (no NaN/inf corner cases)."""
+    lo, hi = float(min_value), float(max_value)
+    return Strategy(lambda rng: float(lo + (hi - lo) * rng.random()),
+                    f"floats({lo},{hi})")
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans")
+
+
+def sampled_from(elements: Sequence[Any]) -> Strategy:
+    elems = list(elements)
+    if not elems:
+        raise ValueError("sampled_from() needs a non-empty sequence")
+    return Strategy(lambda rng: elems[int(rng.integers(len(elems)))],
+                    f"sampled_from({len(elems)} options)")
+
+
+def lists(elements: Strategy, min_size: int = 0,
+          max_size: int = 10) -> Strategy:
+    def draw(rng: np.random.Generator):
+        n = int(rng.integers(min_size, max_size, endpoint=True))
+        return [elements.draw(rng) for _ in range(n)]
+    return Strategy(draw, f"lists({elements.label},{min_size},{max_size})")
+
+
+def tuples(*strategies: Strategy) -> Strategy:
+    return Strategy(lambda rng: tuple(s.draw(rng) for s in strategies),
+                    "tuples")
+
+
+def shapes(min_dims: int = 1, max_dims: int = 5, min_side: int = 1,
+           max_side: int = 64) -> Strategy:
+    """Random tensor shape: tuple of per-mode extents."""
+    return lists(integers(min_side, max_side), min_size=min_dims,
+                 max_size=max_dims).map(tuple)
+
+
+def arrays(dtype: Any, shape: Any, min_value: float = -10.0,
+           max_value: float = 10.0) -> Strategy:
+    """Random ndarray; ``shape`` may be a tuple or a shape Strategy."""
+    dt = np.dtype(dtype)
+
+    def draw(rng: np.random.Generator):
+        shp = shape.draw(rng) if isinstance(shape, Strategy) else tuple(shape)
+        if np.issubdtype(dt, np.integer):
+            return rng.integers(int(min_value), int(max_value),
+                                size=shp, endpoint=True).astype(dt)
+        return (min_value + (max_value - min_value)
+                * rng.random(size=shp)).astype(dt)
+
+    return Strategy(draw, f"arrays({dt},...)")
+
+
+# ---------------------------------------------------------------------------
+# decorators
+# ---------------------------------------------------------------------------
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES,
+             deadline: Any = None, **_ignored: Any):
+    """Attach example-count settings to a @given-wrapped test.
+
+    ``deadline`` (and any other hypothesis-only knob) is accepted and
+    ignored — runs are deterministic, so there is nothing to time-bound.
+    """
+    def apply(fn):
+        setattr(fn, _MAX_EXAMPLES_ATTR, int(max_examples))
+        return fn
+    return apply
+
+
+def given(**strategy_kwargs: Strategy):
+    """Run the test once per generated example, deterministically.
+
+    The RNG seed for example ``i`` mixes a CRC of the test's qualified name
+    with ``i``, so cases are stable across runs/machines yet differ between
+    tests that share strategy definitions.
+    """
+    for name, strat in strategy_kwargs.items():
+        if not isinstance(strat, Strategy):
+            raise TypeError(f"@given argument {name!r} is not a Strategy")
+
+    def decorate(fn):
+        base = zlib.crc32(fn.__qualname__.encode())
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, _MAX_EXAMPLES_ATTR, DEFAULT_MAX_EXAMPLES)
+            only = os.environ.get("PROPTEST_ONLY_EXAMPLE")
+            todo = [int(only)] if only else range(n)
+            for i in todo:
+                rng = np.random.default_rng((base + i) % 2**32)
+                drawn = {k: s.draw(rng)
+                         for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:  # noqa: BLE001 — re-raise annotated
+                    raise AssertionError(
+                        f"proptest example {i}/{n} failed for "
+                        f"{fn.__qualname__} with {drawn!r} "
+                        f"(replay: PROPTEST_ONLY_EXAMPLE={i}): {e}"
+                    ) from e
+
+        setattr(wrapper, _MAX_EXAMPLES_ATTR,
+                getattr(fn, _MAX_EXAMPLES_ATTR, DEFAULT_MAX_EXAMPLES))
+        # Strip the strategy kwargs from the visible signature so pytest
+        # does not mistake them for fixtures (hypothesis does the same).
+        sig = inspect.signature(fn)
+        kept = [p for name, p in sig.parameters.items()
+                if name not in strategy_kwargs]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        return wrapper
+
+    return decorate
+
+
+class _StrategiesNamespace:
+    """`from proptest import strategies as st` — hypothesis-style alias."""
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    booleans = staticmethod(booleans)
+    sampled_from = staticmethod(sampled_from)
+    lists = staticmethod(lists)
+    tuples = staticmethod(tuples)
+    shapes = staticmethod(shapes)
+    arrays = staticmethod(arrays)
+
+
+strategies = _StrategiesNamespace()

@@ -1,7 +1,7 @@
 """ALTO encoding: paper-example exactness + hypothesis round-trip laws."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from proptest import given, settings, strategies as st
 
 from repro.core import encoding as E
 from repro.core import alto

@@ -1,0 +1,126 @@
+"""Boundary behaviour of the §4.2/§4.3 heuristics, exactly at the paper's
+thresholds, and proof that the plan layer honors every decision."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import alto, heuristics, plan as plan_mod
+from repro.core.heuristics import (BUFFERED_ACCUM_COST, HIGH_REUSE,
+                                   MEDIUM_REUSE, PiPolicy, Traversal)
+from repro.sparse import synthetic
+
+
+def _meta_with_reuse(reuse_per_mode):
+    x = synthetic.uniform_tensor((16, 12, 8)[:len(reuse_per_mode)],
+                                 200, seed=0)
+    at = alto.build(x, n_partitions=2)
+    return dataclasses.replace(at.meta,
+                               fiber_reuse=tuple(reuse_per_mode))
+
+
+class TestClassifyReuseBoundaries:
+    def test_exactly_high_threshold_is_medium(self):
+        # classification is strict-greater at HIGH_REUSE (Table 1)
+        assert heuristics.classify_reuse(HIGH_REUSE) == "medium"
+        assert heuristics.classify_reuse(np.nextafter(HIGH_REUSE,
+                                                      np.inf)) == "high"
+
+    def test_exactly_medium_threshold_is_medium(self):
+        # ...but inclusive at MEDIUM_REUSE
+        assert heuristics.classify_reuse(MEDIUM_REUSE) == "medium"
+        assert heuristics.classify_reuse(np.nextafter(MEDIUM_REUSE,
+                                                      -np.inf)) == "limited"
+
+    def test_tensor_class_takes_worst_mode(self):
+        meta = _meta_with_reuse((HIGH_REUSE + 1, MEDIUM_REUSE, 100.0))
+        assert heuristics.tensor_reuse_class(meta) == "medium"
+        meta = _meta_with_reuse((100.0, MEDIUM_REUSE - 1, 100.0))
+        assert heuristics.tensor_reuse_class(meta) == "limited"
+
+
+class TestTraversalBoundary:
+    def test_exactly_buffered_cost_goes_oriented(self):
+        """Recursive pays off only STRICTLY above the 4-memory-op cost."""
+        meta = _meta_with_reuse((BUFFERED_ACCUM_COST,) * 3)
+        for mode in range(3):
+            assert heuristics.choose_traversal(meta, mode) \
+                is Traversal.OUTPUT_ORIENTED
+
+    def test_epsilon_above_goes_recursive(self):
+        above = np.nextafter(BUFFERED_ACCUM_COST, np.inf)
+        meta = _meta_with_reuse((above,) * 3)
+        for mode in range(3):
+            assert heuristics.choose_traversal(meta, mode) \
+                is Traversal.RECURSIVE
+
+    def test_per_mode_independence(self):
+        meta = _meta_with_reuse((BUFFERED_ACCUM_COST + 1,
+                                 BUFFERED_ACCUM_COST,
+                                 BUFFERED_ACCUM_COST - 1))
+        got = [heuristics.choose_traversal(meta, m) for m in range(3)]
+        assert got == [Traversal.RECURSIVE, Traversal.OUTPUT_ORIENTED,
+                       Traversal.OUTPUT_ORIENTED]
+
+
+class TestPiPolicyBoundary:
+    def test_factor_bytes_exactly_at_budget_stays_otf(self):
+        """PRE requires factors STRICTLY over fast memory (§4.3)."""
+        meta = _meta_with_reuse((1.0, 1.0, 1.0))        # limited reuse
+        rank, vb = 4, 4
+        budget = sum(I * rank * vb for I in meta.dims)
+        assert heuristics.choose_pi_policy(
+            meta, rank, value_bytes=vb, fast_mem_bytes=budget) \
+            is PiPolicy.OTF
+        assert heuristics.choose_pi_policy(
+            meta, rank, value_bytes=vb, fast_mem_bytes=budget - 1) \
+            is PiPolicy.PRE
+
+    def test_medium_reuse_never_pre(self):
+        meta = _meta_with_reuse((MEDIUM_REUSE,) * 3)    # medium, not limited
+        assert heuristics.choose_pi_policy(
+            meta, 64, fast_mem_bytes=1) is PiPolicy.OTF
+
+
+class TestPlanHonorsHeuristics:
+    @pytest.mark.parametrize("reuse", [
+        (BUFFERED_ACCUM_COST, BUFFERED_ACCUM_COST + 2, 1.0),
+        (100.0, 100.0, 100.0),
+        (1.0, 1.0, 1.0),
+    ])
+    def test_traversal_decisions_copied_into_plan(self, reuse):
+        meta = _meta_with_reuse(reuse)
+        plan = plan_mod.make_plan(meta, 8)
+        for mode in range(3):
+            assert plan.modes[mode].traversal \
+                is heuristics.choose_traversal(meta, mode)
+
+    def test_pi_policy_copied_into_plan(self):
+        meta = _meta_with_reuse((1.0, 1.0, 1.0))
+        tight = plan_mod.make_plan(meta, 8, fast_mem_bytes=1)
+        roomy = plan_mod.make_plan(meta, 8)
+        assert tight.pi_policy is heuristics.choose_pi_policy(
+            meta, 8, fast_mem_bytes=1)
+        assert tight.pi_policy is PiPolicy.PRE
+        assert roomy.pi_policy is PiPolicy.OTF
+
+    def test_views_built_only_for_oriented_modes(self):
+        meta = _meta_with_reuse((100.0, 1.0, 100.0))
+        x = synthetic.uniform_tensor((16, 12, 8), 200, seed=0)
+        at = alto.build(x, n_partitions=2)
+        at = alto.AltoTensor(meta, at.words, at.values, at.part_start,
+                             at.part_end)
+        plan = plan_mod.make_plan(meta, 4)
+        views = plan_mod.build_views(at, plan)
+        assert sorted(views) == [1]
+
+    def test_cpapr_reports_plan_decisions(self):
+        x, _ = synthetic.lowrank_count((12, 10, 8), rank=2,
+                                       nnz_target=250, seed=5)
+        at = alto.build(x, n_partitions=2)
+        from repro.core import cpapr
+        plan = plan_mod.make_plan(at.meta, 2, backend="reference")
+        res = cpapr.cp_apr(at, rank=2, seed=1,
+                           params=cpapr.CpaprParams(k_max=1), plan=plan)
+        assert res.traversals == list(plan.traversals())
+        assert res.pi_policy == plan.pi_policy.value

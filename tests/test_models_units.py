@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from proptest import given, settings, strategies as st
 
 from repro.configs import reduced_config
 from repro.models.ssm import ssd_chunked, ssd_step

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from proptest import given, settings, strategies as st
 
 from repro.core import alto, mttkrp
 from repro.sparse import synthetic
