@@ -12,12 +12,13 @@ def main() -> None:
                     help="smaller tensors / fewer cases")
     ap.add_argument("--only", default="",
                     help="comma list: mttkrp,cpapr,storage,format,"
-                         "kernels,roofline")
+                         "kernels,roofline,dist")
     args = ap.parse_args()
 
-    from benchmarks import (bench_cpapr, bench_format_generation,
-                            bench_kernels, bench_mttkrp_formats,
-                            bench_roofline, bench_storage)
+    from benchmarks import (bench_cpapr, bench_dist,
+                            bench_format_generation, bench_kernels,
+                            bench_mttkrp_formats, bench_roofline,
+                            bench_storage)
 
     suites = {
         "mttkrp": bench_mttkrp_formats.run,      # paper Fig. 9
@@ -26,6 +27,7 @@ def main() -> None:
         "format": bench_format_generation.run,   # paper Fig. 13
         "kernels": bench_kernels.run,            # Pallas hot-spots
         "roofline": bench_roofline.run,          # EXPERIMENTS §Roofline
+        "dist": bench_dist.run,                  # docs/distributed.md
     }
     wanted = [s for s in args.only.split(",") if s] or list(suites)
 

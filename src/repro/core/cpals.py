@@ -4,6 +4,9 @@ The MTTKRP bottleneck (line 11) runs through the execution-plan layer
 (`core.plan`): the plan resolves the paper's adaptive heuristics into a
 concrete kernel per mode — pure-jnp reference traversals by default on CPU,
 Pallas kernels (interpret on CPU, Mosaic on TPU) when the plan says so.
+Mesh-bearing plans (``make_plan(..., mesh=)``) transparently shard the
+MTTKRP over the mesh's devices (`repro.dist.cpd`); the fully distributed
+driver (sharded Gram matrices too) is `dist.cpd.distributed_cp_als`.
 Gram matrices, the pseudo-inverse solve, and normalization are dense JAX.
 One full sweep over all modes is a single jitted function; the outer
 iteration is a host loop with fit-based early stopping (as in the paper's
@@ -61,15 +64,21 @@ def build_views(at: AltoTensor,
     return plan_mod.build_views(at, plan)
 
 
-def _sweep(plan, at: AltoTensor, views, factors, lam):
+def _sweep(plan, at: AltoTensor, views, factors, lam, gram_fn=None):
     """One CP-ALS sweep over all modes.
 
     Returns (factors, lam, M_last): M_last is the final mode's MTTKRP, the
     only one consistent with the returned factors — the host-side fit
     evaluation depends on it being fresh, not reused from earlier modes.
+
+    ``gram_fn`` overrides the Gram computation (default dense AᵀA); the
+    distributed driver passes `dist.cpd.sharded_gram` so Grams are
+    row-sharded and psum-combined. MTTKRP placement needs no hook — a
+    mesh-bearing plan already routes it through the sharded merge.
     """
+    gram = gram_fn if gram_fn is not None else (lambda A: A.T @ A)
     N = len(factors)
-    grams = [A.T @ A for A in factors]
+    grams = [gram(A) for A in factors]
     M = None
     for n in range(N):
         V = None
@@ -84,7 +93,7 @@ def _sweep(plan, at: AltoTensor, views, factors, lam):
         A = A / lam[None, :]
         factors = list(factors)
         factors[n] = A
-        grams[n] = A.T @ A
+        grams[n] = gram(A)
     return factors, lam, M
 
 
@@ -106,7 +115,8 @@ def _fit_host(M_last, factors, lam, normX2: float) -> float:
 def cp_als(at: AltoTensor, rank: int, n_iters: int = 50, tol: float = 1e-5,
            seed: int = 0, views: dict[int, OrientedView] | None = None,
            factors: list[jnp.ndarray] | None = None,
-           plan: plan_mod.ExecutionPlan | None = None) -> CpalsResult:
+           plan: plan_mod.ExecutionPlan | None = None,
+           gram_fn=None) -> CpalsResult:
     if plan is None:
         plan = plan_mod.make_plan(at.meta, rank)
     elif plan.rank != rank:
@@ -120,7 +130,7 @@ def cp_als(at: AltoTensor, rank: int, n_iters: int = 50, tol: float = 1e-5,
     lam = jnp.ones((rank,), dtype=at.values.dtype)
     normX2 = float((np.asarray(at.values, np.float64) ** 2).sum())
 
-    sweep = jax.jit(functools.partial(_sweep, plan))
+    sweep = jax.jit(functools.partial(_sweep, plan, gram_fn=gram_fn))
     fits: list[float] = []
     prev_fit = -np.inf
     it = 0

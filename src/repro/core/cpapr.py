@@ -12,6 +12,10 @@ generic ALTO row-reduction engine with the paper's two adaptive choices:
 
 The inner multiplicative-update loop (Alg. 2 lines 7-14) is a lax.scan with
 freeze-on-convergence masking so the whole mode update jits.
+
+Mesh-bearing plans (``plan.make_plan(..., mesh=)``) shard the Φ row
+reduction over the mesh via `repro.dist.cpd.sharded_phi` — same driver
+code, per-device oriented segment reduction plus psum carry merge.
 """
 from __future__ import annotations
 

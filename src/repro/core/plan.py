@@ -1,14 +1,18 @@
 """Execution plans: resolve the paper's adaptive heuristics into kernels.
 
-The paper (§4.2/§4.3, Table 1) selects a traversal (recursive vs
-output-oriented) and a Π policy (PRE vs OTF) per tensor/mode at runtime.
-On the JAX/TPU target every such decision must be *static* — jit control
-flow cannot branch on data — so this module turns the heuristics plus the
-tensor's static metadata (`AltoMeta`) into an :class:`ExecutionPlan`: a
-frozen, hashable description of exactly which compiled kernel variant runs
-for every (mode, rank) combination, with all block sizes resolved.
+Paper §4.2/§4.3 (Table 1). Invariants: plans are frozen and hashable
+(static jit arguments, compiled-executable cache keys); every decision is
+made from static `AltoMeta`, never from traced data.
 
-The plan answers three questions the call sites used to guess at:
+The paper selects a traversal (recursive vs output-oriented) and a Π
+policy (PRE vs OTF) per tensor/mode at runtime. On the JAX/TPU target
+every such decision must be *static* — jit control flow cannot branch on
+data — so this module turns the heuristics plus the tensor's static
+metadata (`AltoMeta`) into an :class:`ExecutionPlan`: a frozen, hashable
+description of exactly which compiled kernel variant runs for every
+(mode, rank) combination, with all block sizes resolved.
+
+The plan answers four questions the call sites used to guess at:
 
   * **traversal** per mode — `heuristics.choose_traversal` (fiber reuse vs
     the 4-memory-op buffered accumulation cost, §4.2);
@@ -18,10 +22,23 @@ The plan answers three questions the call sites used to guess at:
     the caller hand-picking tile sizes;
   * **backend** — "pallas" (interpret-mode on CPU, Mosaic on TPU) or
     "reference" (the pure-jnp traversals in `core.mttkrp`, retained as the
-    plan's always-available oracle backend).
+    plan's always-available oracle backend);
+  * **placement** — a plan built with ``mesh=`` routes every row reduction
+    through the sharded oriented merge in `repro.dist.cpd`: the row-sorted
+    nonzero stream is cut into per-device contiguous shards, each device
+    runs the single-device segment reduction locally, and boundary-run
+    carries plus the final rows are combined by ``psum``. Mesh-bearing
+    plans force the output-oriented traversal for every mode (row-range
+    partitioning needs the row-sorted stream; the recursive traversal's
+    partition intervals overlap arbitrarily across devices) and divide the
+    VMEM budget by the shard count — shard-local blocks are sized as if
+    all shards ran concurrently on one core, which is exactly what the
+    fake-host-device test configuration does, and on real multi-chip
+    meshes it only makes tiles conservatively smaller.
 
-Because `ExecutionPlan` is hashable it can travel as a static jit argument
-and doubles as the key of the compiled-executable cache in `kernels.ops`.
+Because `ExecutionPlan` is hashable (``jax.sharding.Mesh`` included) it can
+travel as a static jit argument and doubles as the key of the
+compiled-executable cache in `kernels.ops`.
 """
 from __future__ import annotations
 
@@ -65,12 +82,28 @@ class ExecutionPlan:
     interpret: bool | None             # None = auto (non-TPU -> interpret)
     pi_policy: heuristics.PiPolicy
     modes: tuple[ModePlan, ...]
+    # Multi-device placement: shard the oriented row reduction over the
+    # first axis of this mesh (None = single device). Mesh is hashable, so
+    # mesh-bearing plans remain valid static jit arguments / cache keys.
+    mesh: jax.sharding.Mesh | None = None
 
     def mode_plan(self, mode: int) -> ModePlan:
         return self.modes[mode]
 
     def traversals(self) -> tuple[str, ...]:
         return tuple(m.traversal.value for m in self.modes)
+
+    @property
+    def mesh_axis(self) -> str | None:
+        """Mesh axis the row-sorted stream is sharded over (first axis)."""
+        return self.mesh.axis_names[0] if self.mesh is not None else None
+
+    @property
+    def n_shards(self) -> int:
+        """Row-range shard count (1 without a mesh)."""
+        if self.mesh is None:
+            return 1
+        return int(self.mesh.shape[self.mesh.axis_names[0]])
 
 
 # ---------------------------------------------------------------------------
@@ -142,6 +175,24 @@ def choose_rank_block(meta: AltoMeta, mode: int, rank: int,
     return 1
 
 
+def choose_rank_block_oriented(meta: AltoMeta, mode: int, rank: int,
+                               dtype_bytes: int = 4,
+                               vmem_limit: int = VMEM_BYTES) -> int:
+    """Largest divisor of ``rank`` whose *oriented* footprint fits VMEM.
+
+    Sized at the minimum nonzero block so the rank tile is constrained by
+    the resident factor tiles (the term that actually scales with rank),
+    not by the recursive kernel's Temp buffer — a mode routed oriented
+    never runs that kernel. `choose_block_m` then shrinks the block to
+    fit the chosen tile.
+    """
+    for rb in _divisors_desc(rank):
+        if oriented_vmem_bytes(meta, mode, MIN_BLOCK_M, rb,
+                               dtype_bytes) <= vmem_limit:
+            return rb
+    return 1
+
+
 def choose_block_m(meta: AltoMeta, mode: int, r_block: int,
                    dtype_bytes: int = 4,
                    vmem_limit: int = VMEM_BYTES) -> int:
@@ -170,16 +221,37 @@ def default_backend() -> str:
 def make_plan(meta: AltoMeta, rank: int, *, backend: str | None = None,
               interpret: bool | None = None, dtype_bytes: int = 4,
               vmem_limit: int = VMEM_BYTES,
-              fast_mem_bytes: int = heuristics.DEFAULT_FAST_MEM_BYTES
-              ) -> ExecutionPlan:
-    """Resolve heuristics + static meta into a concrete execution plan."""
+              fast_mem_bytes: int = heuristics.DEFAULT_FAST_MEM_BYTES,
+              mesh: jax.sharding.Mesh | None = None) -> ExecutionPlan:
+    """Resolve heuristics + static meta into a concrete execution plan.
+
+    With ``mesh=`` the plan becomes mesh-bearing: every mode is forced to
+    the output-oriented traversal (the sharded merge partitions the
+    row-sorted stream into per-device row ranges; the recursive
+    traversal's partition intervals overlap arbitrarily across devices)
+    and the VMEM budget is divided by the shard count (see module
+    docstring), so the shard-local Pallas tiles are sized for the
+    per-device slice of the stream.
+    """
     backend = backend or default_backend()
     if backend not in ("pallas", "reference"):
         raise ValueError(f"unknown backend {backend!r}")
+    n_shards = 1
+    if mesh is not None:
+        n_shards = int(mesh.shape[mesh.axis_names[0]])
+        vmem_limit = max(1, vmem_limit // n_shards)
     modes = []
     for n in range(meta.enc.ndim):
-        traversal = heuristics.choose_traversal(meta, n)
-        rb = choose_rank_block(meta, n, rank, dtype_bytes, vmem_limit)
+        traversal = (heuristics.Traversal.OUTPUT_ORIENTED if mesh is not None
+                     else heuristics.choose_traversal(meta, n))
+        # Budget the rank tile against the kernel that will actually run:
+        # the recursive Temp model would throttle oriented modes (huge
+        # partition intervals, or any mesh plan) for no VMEM benefit.
+        if traversal is heuristics.Traversal.RECURSIVE:
+            rb = choose_rank_block(meta, n, rank, dtype_bytes, vmem_limit)
+        else:
+            rb = choose_rank_block_oriented(meta, n, rank, dtype_bytes,
+                                            vmem_limit)
         bm = choose_block_m(meta, n, rb, dtype_bytes, vmem_limit)
         vm = (recursive_vmem_bytes(meta, n, rb, dtype_bytes)
               if traversal is heuristics.Traversal.RECURSIVE
@@ -191,7 +263,7 @@ def make_plan(meta: AltoMeta, rank: int, *, backend: str | None = None,
         meta, rank, value_bytes=dtype_bytes, fast_mem_bytes=fast_mem_bytes)
     return ExecutionPlan(meta=meta, rank=rank, backend=backend,
                          interpret=interpret, pi_policy=pi_policy,
-                         modes=tuple(modes))
+                         modes=tuple(modes), mesh=mesh)
 
 
 def plan_for(at: AltoTensor, rank: int, **kwargs) -> ExecutionPlan:
@@ -218,7 +290,12 @@ def execute_mttkrp(plan: ExecutionPlan, at: AltoTensor,
 
     Falls back to the recursive traversal when the plan says oriented but
     no view was materialized (same contract as `mttkrp_adaptive`).
+    Mesh-bearing plans route to the sharded oriented merge in
+    `repro.dist.cpd` (shard-local reduction + psum carry merge).
     """
+    if plan.mesh is not None:
+        from repro.dist import cpd as dist_cpd
+        return dist_cpd.sharded_mttkrp(plan, at, views, factors, mode)
     mp = plan.modes[mode]
     oriented = (mp.traversal is heuristics.Traversal.OUTPUT_ORIENTED
                 and views is not None and mode in views)
@@ -247,6 +324,10 @@ def execute_phi(plan: ExecutionPlan, at: AltoTensor,
     """
     if (pi is None) == (factors is None):
         raise ValueError("pass exactly one of pi= / factors=")
+    if plan.mesh is not None:
+        from repro.dist import cpd as dist_cpd
+        return dist_cpd.sharded_phi(plan, at, view, B, mode,
+                                    factors=factors, pi=pi, eps=eps)
     mp = plan.modes[mode]
     oriented = (mp.traversal is heuristics.Traversal.OUTPUT_ORIENTED
                 and view is not None)
@@ -258,13 +339,21 @@ def execute_phi(plan: ExecutionPlan, at: AltoTensor,
                                           interpret=plan.interpret)
         return ops.cpapr_phi(at, B, mode, factors=factors, pi=pi, eps=eps,
                              interpret=plan.interpret)
-    # reference backend: pure-jnp traversals
+    # reference backend: pure-jnp traversals. Under ALTO-PRE the index
+    # decode is dead work (the Pallas kernel skips it too): the oriented
+    # view already materializes the target rows, so only the OTF path —
+    # which rebuilds the Khatri-Rao rows — pays for a delinearize.
     words = view.words if oriented else at.words
     vals = view.values if oriented else at.values
-    coords = delinearize(plan.meta.enc, words)
-    krp = pi if pi is not None else core_mttkrp.krp_rows(coords, factors,
-                                                         mode)
-    denom = jnp.maximum(jnp.sum(B[coords[:, mode]] * krp, axis=-1), eps)
+    if pi is None:
+        coords = delinearize(plan.meta.enc, words)
+        krp = core_mttkrp.krp_rows(coords, factors, mode)
+        rows = coords[:, mode]
+    else:
+        krp = pi
+        rows = (view.rows if oriented
+                else delinearize(plan.meta.enc, words)[:, mode])
+    denom = jnp.maximum(jnp.sum(B[rows] * krp, axis=-1), eps)
     contrib = (vals / denom)[:, None] * krp
     if oriented:
         return core_mttkrp.row_reduce_oriented(view, contrib)

@@ -1,0 +1,16 @@
+"""Distributed execution of the ALTO stack (paper §4 at multi-device scale).
+
+Two seams:
+
+* `repro.dist.cpd` — CP decomposition with the row-sorted nonzero stream
+  cut into per-device row-range shards; each device runs the existing
+  single-device oriented segment reduction locally, and boundary-run
+  carries plus Gram matrices are combined by ``psum`` (`shard_map`).
+* `repro.dist.pipeline` — GPipe-style pipeline parallelism over the model
+  stack (stage-sharded block parameters, microbatches rotated between
+  stages with ``ppermute``).
+
+Everything here runs identically on real accelerator meshes and on fake
+host devices (``--xla_force_host_platform_device_count=N``), which is how
+the seed test-suite exercises multi-device semantics on a CPU-only host.
+"""

@@ -1,0 +1,265 @@
+"""Distributed CP-ALS / CP-APR over row-range shards (paper §4.1/§4.2).
+
+ALTO's linearized nonzero stream is "streamed from memory and amenable to
+parallel execution"; this module is that claim made literal on a device
+mesh. The oriented view (`core.alto.oriented_view`) sorts nonzeros by the
+target-mode row, and the sharding is the simplest one that preserves every
+single-device invariant: cut the sorted stream into per-device
+**contiguous, equal-size slices** (`shard_map` over the mesh's first
+axis). Each device runs the *existing* single-device oriented segment
+reduction on its slice — reference jnp `segment_sum` or the Pallas kernel
+plus `kernels.ops.segment_merge`, exactly as the plan dictates — into a
+full-width dense ``(I_n, R)`` output, and the outputs are combined with
+``psum``.
+
+Invariants (the carry-merge correctness condition):
+
+* the stream stays **row-sorted**; a shard is a contiguous slice, so each
+  device's rows are a sorted run and `segment_sum(indices_are_sorted)` /
+  the kernel's run-rank scan stay valid;
+* row ids are **global**, so a row whose run spans a shard boundary
+  yields one partial sum per adjacent device and the ``psum`` adds them —
+  the cross-device analogue of the in-block boundary carry that
+  `ops.segment_merge` resolves, and of the paper's "atomics only at
+  partition boundaries";
+* plans are **static and hashable** (mesh included), so the sharded
+  executables cache and jit exactly like the single-device ones;
+* padding replicates the last element with zero values, contributing
+  nothing while keeping shard shapes equal (perfect workload balance, the
+  §4.1 property, inherited by construction from the equal-size cut).
+
+`distributed_cp_als` is the driver: it *is* `core.cpals.cp_als` run under
+a mesh-bearing plan (MTTKRP placement comes from the plan routing) with
+`sharded_gram` injected as the sweep's Gram hook — one sweep
+implementation, so its fit sequence matches the single-device one to
+float32 reduction-order noise (≪ 1e-3).
+
+The shard-local reductions are pure functions of their slice, so the unit
+tests simulate the mesh by calling them per shard and summing on the host
+— bit-identical to what ``psum`` computes on device.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import alto
+from repro.core import cpals
+from repro.core import plan as plan_mod
+from repro.core.alto import AltoTensor, OrientedView
+from repro.core.mttkrp import krp_rows
+from repro.kernels import mttkrp_oriented as _oriented
+from repro.kernels import ops
+from repro.sparse.tensor import SparseTensor
+
+
+# The padding rule is part of the carry-merge correctness condition;
+# there is exactly one implementation (shared with the kernel wrappers).
+_pad_stream = ops.pad_sorted_stream
+
+
+def _shard_mult(plan: plan_mod.ExecutionPlan, mode: int) -> int:
+    """Global padding multiple: per-shard length must divide block_m on
+    the Pallas path (the kernel's grid is exact, no partial blocks)."""
+    bm = plan.modes[mode].block_m if plan.backend == "pallas" else 1
+    return plan.n_shards * bm
+
+
+# ---------------------------------------------------------------------------
+# Shard-local reductions (pure — unit-testable without a mesh)
+# ---------------------------------------------------------------------------
+
+def local_mttkrp(plan: plan_mod.ExecutionPlan, mode: int, rows, words,
+                 values, factors) -> jnp.ndarray:
+    """One device's oriented MTTKRP over its slice: full-width (I_n, R).
+
+    Exactly the single-device oriented reduction (plan-selected backend);
+    summing this over all slices of a sorted stream equals the unsharded
+    result because `ops.segment_merge` / `segment_sum` scatter to global
+    rows (see module docstring).
+    """
+    meta = plan.meta
+    I_n = meta.dims[mode]
+    if plan.backend == "pallas":
+        mp = plan.modes[mode]
+        partials = _oriented.mttkrp_oriented_partials_pallas(
+            meta.enc, mode, rows, words, values, list(factors),
+            block_m=mp.block_m, r_block=mp.r_block,
+            interpret=ops._auto_interpret(plan.interpret))
+        return ops.segment_merge(partials, rows, I_n)
+    coords = alto.delinearize(meta.enc, words)
+    contrib = values[:, None] * krp_rows(coords, factors, mode)
+    return jax.ops.segment_sum(contrib, rows, num_segments=I_n,
+                               indices_are_sorted=True)
+
+
+def local_phi(plan: plan_mod.ExecutionPlan, mode: int, eps: float, rows,
+              words, values, B, factors=None, pi=None) -> jnp.ndarray:
+    """One device's fused CP-APR Φ over its slice: full-width (I_n, R).
+
+    ``B`` is replicated (the Φ denominator needs the full-rank row
+    ``B[i_n, :]``, available locally because rows are global ids); the Π
+    rows (ALTO-PRE) travel with the stream shard.
+    """
+    meta = plan.meta
+    I_n = meta.dims[mode]
+    if plan.backend == "pallas":
+        partials = _oriented.phi_oriented_partials_pallas(
+            meta.enc, mode, eps, rows, words, values, B,
+            factors=list(factors) if factors is not None else None, pi=pi,
+            block_m=plan.modes[mode].block_m,
+            interpret=ops._auto_interpret(plan.interpret))
+        return ops.segment_merge(partials, rows, I_n)
+    if pi is None:
+        coords = alto.delinearize(meta.enc, words)
+        pi = krp_rows(coords, factors, mode)
+    denom = jnp.maximum(
+        jnp.sum(jnp.take(B, rows, axis=0) * pi, axis=-1), eps)
+    contrib = (values / denom)[:, None] * pi
+    return jax.ops.segment_sum(contrib, rows, num_segments=I_n,
+                               indices_are_sorted=True)
+
+
+def local_gram(A_shard: jnp.ndarray) -> jnp.ndarray:
+    """One device's Gram contribution over its row slice: AᵀA is a sum of
+    rank-1 outer products, so row shards combine by plain addition."""
+    return A_shard.T @ A_shard
+
+
+# ---------------------------------------------------------------------------
+# shard_map wrappers (the mesh-visible primitives)
+# ---------------------------------------------------------------------------
+
+def sharded_mttkrp(plan: plan_mod.ExecutionPlan, at: AltoTensor,
+                   views: dict[int, OrientedView] | None, factors,
+                   mode: int) -> jnp.ndarray:
+    """MTTKRP for one mode with the stream row-range-sharded over the mesh.
+
+    Entry point `core.plan.execute_mttkrp` routes mesh-bearing plans to.
+    """
+    if plan.mesh is None:
+        raise ValueError("sharded_mttkrp needs a mesh-bearing plan")
+    if not views or mode not in views:
+        raise ValueError(
+            "mesh-bearing plans orient every mode; build views with "
+            "repro.core.plan.build_views(at, plan)")
+    view = views[mode]
+    ax = plan.mesh_axis
+    local = functools.partial(local_mttkrp, plan, mode)
+
+    def build():
+        @functools.partial(shard_map, mesh=plan.mesh,
+                           in_specs=(P(ax), P(ax), P(ax), P()),
+                           out_specs=P(),
+                           check_rep=False)  # pallas_call has no rep rule
+        def sharded(rows, words, values, factors):
+            return jax.lax.psum(local(rows, words, values, factors), ax)
+
+        def run(rows, words, values, factors):
+            rows, words, values, _ = _pad_stream(rows, words, values,
+                                                 _shard_mult(plan, mode))
+            return sharded(rows, words, values, factors)
+
+        return jax.jit(run)
+
+    fn = ops._cached_executable(("dist_mttkrp", plan, mode), build)
+    return fn(view.rows, view.words, view.values, list(factors))
+
+
+def sharded_phi(plan: plan_mod.ExecutionPlan, at: AltoTensor,
+                view: OrientedView | None, B: jnp.ndarray, mode: int,
+                factors=None, pi: jnp.ndarray | None = None,
+                eps: float = 1e-10) -> jnp.ndarray:
+    """CP-APR Φ row reduction, row-range-sharded (`execute_phi` routing)."""
+    if plan.mesh is None:
+        raise ValueError("sharded_phi needs a mesh-bearing plan")
+    if view is None:
+        raise ValueError("mesh-bearing plans orient every mode; pass the "
+                         "mode's oriented view")
+    ax = plan.mesh_axis
+    pre_pi = pi is not None
+    local = functools.partial(local_phi, plan, mode, eps)
+    pi_spec = P(ax) if pre_pi else P()
+
+    def build():
+        @functools.partial(
+            shard_map, mesh=plan.mesh,
+            in_specs=(P(ax), P(ax), P(ax), P(), P(), pi_spec),
+            out_specs=P(),
+            check_rep=False)              # pallas_call has no rep rule
+        def sharded(rows, words, values, B, factors, pi):
+            return jax.lax.psum(
+                local(rows, words, values, B, factors=factors, pi=pi), ax)
+
+        def run(rows, words, values, B, factors, pi):
+            rows, words, values, pi = _pad_stream(
+                rows, words, values, _shard_mult(plan, mode), pi=pi)
+            return sharded(rows, words, values, B, factors, pi)
+
+        return jax.jit(run)
+
+    fn = ops._cached_executable(("dist_phi", plan, mode, eps, pre_pi),
+                                build)
+    return fn(view.rows, view.words, view.values, B,
+              list(factors) if factors is not None else None, pi)
+
+
+def sharded_gram(mesh, A: jnp.ndarray) -> jnp.ndarray:
+    """AᵀA with the rows of ``A`` sharded over the mesh's first axis and
+    the per-device Grams combined by ``psum`` (zero-row padding)."""
+    ax = mesh.axis_names[0]
+    D = int(mesh.shape[ax])
+
+    def build():
+        @functools.partial(shard_map, mesh=mesh, in_specs=(P(ax),),
+                           out_specs=P(), check_rep=False)
+        def sharded(A_shard):
+            return jax.lax.psum(local_gram(A_shard), ax)
+
+        def run(A):
+            pad = (-A.shape[0]) % D
+            if pad:
+                A = jnp.concatenate(
+                    [A, jnp.zeros((pad, A.shape[1]), A.dtype)])
+            return sharded(A)
+
+        return jax.jit(run)
+
+    fn = ops._cached_executable(("dist_gram", mesh), build)
+    return fn(A)
+
+
+# ---------------------------------------------------------------------------
+# Distributed CP-ALS driver
+# ---------------------------------------------------------------------------
+
+def distributed_cp_als(x: SparseTensor | AltoTensor, rank: int, mesh, *,
+                       n_iters: int = 50, tol: float = 1e-5, seed: int = 0,
+                       n_partitions: int | None = None,
+                       backend: str | None = None,
+                       interpret: bool | None = None):
+    """CP-ALS with MTTKRP and Grams sharded over ``mesh`` (GPipe's sibling
+    seam: data-parallel over the nonzero stream, model-replicated factors).
+
+    This IS `core.cpals.cp_als` — same sweep, same host-side float64
+    Kolda–Bader fit — run under a mesh-bearing plan (MTTKRP routed to
+    `sharded_mttkrp` by `plan.execute_mttkrp`) with `sharded_gram` as the
+    sweep's Gram hook. The only deltas from single-device are reduction
+    order (shard partials added by psum), so fits match to well under
+    1e-3. Returns ``(lam, factors, fits)``.
+    """
+    if isinstance(x, AltoTensor):
+        at = x
+    else:
+        D = int(mesh.shape[mesh.axis_names[0]])
+        at = alto.build(x, n_partitions=n_partitions or D)
+    plan = plan_mod.make_plan(at.meta, rank, backend=backend,
+                              interpret=interpret, mesh=mesh)
+    res = cpals.cp_als(at, rank, n_iters=n_iters, tol=tol, seed=seed,
+                       plan=plan,
+                       gram_fn=functools.partial(sharded_gram, mesh))
+    return res.lam, res.factors, res.fits

@@ -17,7 +17,7 @@ segment-reduction designs of ALTO (arXiv:2102.10245) and Dynasor
     so the operand is (block_m, block_m) regardless of the mode length;
   * a row whose run crosses a block boundary yields one partial sum in
     each adjacent block; the boundary carry is merged outside the kernel
-    by `ops._segment_merge`, which scatters every block's segment sums to
+    by `ops.segment_merge`, which scatters every block's segment sums to
     their global rows (at most one shared row per boundary — the paper's
     "atomics only at partition boundaries", pull-based).
 
@@ -27,7 +27,15 @@ same segment reduction, for both Π policies (ALTO-PRE / ALTO-OTF).
 
 VMEM per grid step (f32): block_m·(W + 2 + 2·r_block + block_m) +
 Σ_{m≠mode} I_m·r_block words — `core.plan.choose_block_m` sizes block_m so
-this fits the 16 MB budget.
+this fits the 16 MB budget (divided by the shard count for mesh-bearing
+plans, see `core.plan`).
+
+Invariants: the input stream is row-sorted with length an exact multiple
+of block_m (callers pad — `ops` / `dist.cpd`); row ids are global, and the
+carry-merge correctness condition is that `ops.segment_merge` reproduces
+`run_rank_segments` bit-for-bit — which also makes the per-block partials
+safe to compute on shard-local slices and combine by psum
+(`repro.dist.cpd`); all tiling comes from static, hashable plan metadata.
 """
 from __future__ import annotations
 
@@ -46,7 +54,7 @@ DEFAULT_BLOCK_M = 256
 def run_rank_segments(rows):
     """Run-rank segment ids along the last axis of a sorted row array.
 
-    Shared between the kernels and `ops._segment_merge`: the merge's
+    Shared between the kernels and `ops.segment_merge`: the merge's
     scatter map must reproduce this segmentation bit-for-bit, so there is
     exactly one implementation.
     """
@@ -105,7 +113,7 @@ def mttkrp_oriented_partials_pallas(enc: AltoEncoding, mode: int,
     ``rows``/``words``/``values`` must be in oriented (row-sorted) order
     with length a multiple of ``block_m`` (ops pads). Segment slot j of
     block b holds the sum of the j-th distinct-row run inside that block;
-    `ops._segment_merge` scatters the slots to global rows and thereby
+    `ops.segment_merge` scatters the slots to global rows and thereby
     merges boundary carries.
     """
     M, W = words.shape

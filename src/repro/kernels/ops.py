@@ -1,5 +1,14 @@
 """Jit'd public wrappers around the Pallas kernels, with executable caching.
 
+Paper §4.2/§4.3 kernel entry points. Invariants: oriented entry points
+consume a *row-sorted* stream (ascending target-mode row, `ops` pads it to
+the block multiple with zero-valued copies of the last element); every
+cache key is built from static, hashable metadata only (`AltoMeta`, mode,
+tiling, interpret flag), never from traced values; `segment_merge` must
+reproduce the kernels' run-rank segmentation bit-for-bit (both call
+`mttkrp_oriented.run_rank_segments`) — that is the carry-merge correctness
+condition.
+
 On the CPU test host every kernel runs with interpret=True (the Pallas
 interpreter traces the kernel body into regular XLA); on TPU the same call
 sites compile to Mosaic. `interpret=None` auto-detects.
@@ -70,8 +79,8 @@ def pull_reduction(partials: jnp.ndarray, part_start_mode: jnp.ndarray,
     return out.at[rows].add(partials)
 
 
-def _segment_merge(partials: jnp.ndarray, rows: jnp.ndarray,
-                   out_dim: int) -> jnp.ndarray:
+def segment_merge(partials: jnp.ndarray, rows: jnp.ndarray,
+                  out_dim: int) -> jnp.ndarray:
     """Scatter per-block segment sums to global rows (boundary carry merge).
 
     ``partials`` is (n_blocks, block_m, R) from the oriented kernel; slot j
@@ -82,6 +91,14 @@ def _segment_merge(partials: jnp.ndarray, rows: jnp.ndarray,
     the first of the next — both scatter to the same output row, which is
     exactly the carry merge ("atomics only at partition boundaries").
     Unused slots carry zero sums and scatter harmlessly to row 0.
+
+    This is the shardable half of the oriented reduction: the scatter-add
+    is associative and ``rows`` carries *global* row ids, so applying it to
+    each device's contiguous slice of the sorted stream and ``psum``-ing
+    the dense outputs yields exactly the single-device result — a run that
+    spans a device boundary becomes one partial sum per device, merged by
+    the psum the same way in-block boundary carries are merged here.
+    `repro.dist.cpd` relies on this to shard CP-ALS/CP-APR row reductions.
     """
     nb, bm, R = partials.shape
     rows_b = rows.reshape(nb, bm)
@@ -92,22 +109,28 @@ def _segment_merge(partials: jnp.ndarray, rows: jnp.ndarray,
     return out.at[seg_rows.reshape(-1)].add(partials.reshape(nb * bm, R))
 
 
-def _pad_oriented(rows, words, values, block_m: int):
-    """Pad the sorted stream to a multiple of block_m.
+def pad_sorted_stream(rows, words, values, mult: int, pi=None):
+    """Pad the sorted stream to a multiple of ``mult`` elements.
 
-    Padding replicates the final row/words (stays sorted, same segment)
-    with zero values, so padded elements contribute nothing.
+    The single implementation of the padding rule the carry merge relies
+    on (`mttkrp_oriented`'s block grid, `dist.cpd`'s shard cut): the
+    final row/words are replicated (stream stays sorted, padding joins
+    the final segment) with zero values, so padded elements contribute
+    nothing to any reduction. ``pi`` (ALTO-PRE Khatri-Rao rows) pads
+    with zeros. Returns ``(rows, words, values, pi)``.
     """
     M = rows.shape[0]
-    pad = (-M) % block_m
+    pad = (-M) % mult
     if pad == 0:
-        return rows, words, values
+        return rows, words, values, pi
     rows = jnp.concatenate([rows, jnp.broadcast_to(rows[-1:], (pad,))])
     words = jnp.concatenate(
         [words, jnp.broadcast_to(words[-1:], (pad, words.shape[1]))])
     values = jnp.concatenate(
         [values, jnp.zeros((pad,), values.dtype)])
-    return rows, words, values
+    if pi is not None:
+        pi = jnp.concatenate([pi, jnp.zeros((pad, pi.shape[1]), pi.dtype)])
+    return rows, words, values, pi
 
 
 # ---------------------------------------------------------------------------
@@ -167,12 +190,12 @@ def mttkrp_oriented(view: OrientedView, factors,
 
     def build():
         def run(rows, words, values, factors):
-            rows, words, values = _pad_oriented(rows, words, values,
-                                                block_m)
+            rows, words, values, _ = pad_sorted_stream(rows, words, values,
+                                                       block_m)
             partials = _oriented.mttkrp_oriented_partials_pallas(
                 meta.enc, mode, rows, words, values, factors,
                 block_m=block_m, r_block=rb, interpret=interp)
-            return _segment_merge(partials, rows, meta.dims[mode])
+            return segment_merge(partials, rows, meta.dims[mode])
         return jax.jit(run)
 
     fn = _cached_executable(
@@ -217,18 +240,12 @@ def cpapr_phi_oriented(view: OrientedView, B: jnp.ndarray,
 
     def build():
         def run(rows, words, values, B, factors, pi):
-            if pi is not None:
-                M = rows.shape[0]
-                pad = (-M) % block_m
-                if pad:
-                    pi = jnp.concatenate(
-                        [pi, jnp.zeros((pad, pi.shape[1]), pi.dtype)])
-            rows, words, values = _pad_oriented(rows, words, values,
-                                                block_m)
+            rows, words, values, pi = pad_sorted_stream(rows, words, values,
+                                                        block_m, pi=pi)
             partials = _oriented.phi_oriented_partials_pallas(
                 meta.enc, mode, eps, rows, words, values, B,
                 factors=factors, pi=pi, block_m=block_m, interpret=interp)
-            return _segment_merge(partials, rows, meta.dims[mode])
+            return segment_merge(partials, rows, meta.dims[mode])
         return jax.jit(run)
 
     fn = _cached_executable(

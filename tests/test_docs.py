@@ -1,0 +1,38 @@
+"""Docs stay true: intra-repo links resolve and code fences execute.
+
+Thin tier-1 wrapper around ``tools/check_docs.py`` (the CI docs job runs
+the same checker), so a PR that breaks a documented snippet or moves a
+linked file goes red locally, not just in the docs lane.
+"""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def _pages():
+    return check_docs.default_files()
+
+
+def test_docs_pages_exist():
+    names = {p.name for p in _pages()}
+    for required in ("architecture.md", "alto-format.md", "distributed.md",
+                     "benchmarks.md", "known-issues.md"):
+        assert required in names, f"docs/{required} missing"
+
+
+@pytest.mark.parametrize("page", _pages(), ids=lambda p: p.name)
+def test_docs_links_resolve(page):
+    assert check_docs.check_links(page) == []
+
+
+@pytest.mark.parametrize("page", _pages(), ids=lambda p: p.name)
+def test_docs_snippets_execute(page):
+    errs = check_docs.run_snippets(page)
+    assert errs == [], "\n".join(errs)

@@ -1,0 +1,102 @@
+"""Docs checker: run ``python`` code fences, verify intra-repo links.
+
+Usage::
+
+    PYTHONPATH=src:. python tools/check_docs.py [files...]
+
+Default file set: ``docs/*.md`` + ``README.md``. Two checks:
+
+* **links** — every relative markdown link (``[x](path)``, optionally
+  with a ``#fragment``) must resolve to an existing file/directory,
+  relative to the page. External (``http``/``mailto``) and pure-anchor
+  links are skipped.
+* **snippets** — all ``python`` code fences of a page are concatenated
+  in order and executed in ONE fresh subprocess (cwd = repo root,
+  ``PYTHONPATH=src:.``), so a page reads top-to-bottom as a script and
+  may set ``XLA_FLAGS`` before its first jax import. ``text``/``bash``
+  fences are never executed.
+
+Exit code 0 iff everything passes; per-page results on stdout. CI runs
+this as the docs job, and ``tests/test_docs.py`` runs it in tier-1.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(\w*)\n(.*?)^```", re.S | re.M)
+SNIPPET_TIMEOUT = 600
+
+
+def default_files() -> list[pathlib.Path]:
+    return sorted((ROOT / "docs").glob("*.md")) + [ROOT / "README.md"]
+
+
+def check_links(path: pathlib.Path) -> list[str]:
+    errors = []
+    for m in LINK_RE.finditer(path.read_text()):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (path.parent / rel).resolve().exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link "
+                          f"-> {target}")
+    return errors
+
+
+def python_blocks(path: pathlib.Path) -> str:
+    return "\n\n".join(code for lang, code in
+                       FENCE_RE.findall(path.read_text())
+                       if lang == "python")
+
+
+def run_snippets(path: pathlib.Path) -> list[str]:
+    code = python_blocks(path)
+    if not code.strip():
+        return []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src:." + (
+        ":" + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    r = subprocess.run([sys.executable, "-c", code], cwd=ROOT, env=env,
+                       capture_output=True, text=True,
+                       timeout=SNIPPET_TIMEOUT)
+    if r.returncode != 0:
+        tail = (r.stdout + r.stderr)[-2000:]
+        return [f"{path.relative_to(ROOT)}: snippet execution failed:\n"
+                f"{tail}"]
+    return []
+
+
+def check(files=None, snippets: bool = True) -> list[str]:
+    errors = []
+    for path in files or default_files():
+        path = pathlib.Path(path).resolve()
+        errs = check_links(path)
+        if snippets:
+            errs += run_snippets(path)
+        status = "FAIL" if errs else "ok"
+        print(f"{status:4} {path.relative_to(ROOT)}", flush=True)
+        errors += errs
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = [pathlib.Path(a) for a in argv] or None
+    errors = check(files)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"{'FAILED' if errors else 'PASSED'} "
+          f"({len(errors)} error(s))")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
