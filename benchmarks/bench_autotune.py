@@ -1,0 +1,63 @@
+"""Static-model vs measured-plan deltas per mode (docs/autotuning.md).
+
+For each tensor in the shared jnp-vs-plan set the suite runs the
+measured autotuner once per mode (tmpdir store — the user's plan cache
+is never touched) and emits paired rows from the tuner's own report:
+
+    autotune/zipf_small/mode0/static,3333.1,traversal=oriented;r_block=16;block_m=1024
+    autotune/zipf_small/mode0/measured,265.2,traversal=oriented;r_block=16;block_m=128;candidates=9
+
+Both timings come from the SAME median-of-k sweep (`ops.median_time`
+through the compiled-executable cache), so measured ≤ static holds by
+construction: the static analytic choice is candidate 0 of the space the
+winner is the argmin of. A final `store_hit` row per tensor confirms the
+persisted plan round-trips with zero timing runs.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+from benchmarks.common import emit, plan_comparison_tensors
+
+RANK = 16
+
+
+def run(quick: bool = False):
+    from repro.core import alto, autotune, plan as plan_mod
+    from repro.kernels import ops
+
+    tensors = plan_comparison_tensors()
+    if quick:
+        tensors = dict(list(tensors.items())[:1])
+    with tempfile.TemporaryDirectory() as td:
+        store = os.path.join(td, "plans.json")
+        for name, (fn, kwargs) in tensors.items():
+            kwargs = dict(kwargs)
+            if quick:
+                kwargs["nnz"] = min(kwargs["nnz"], 5_000)
+            x = fn(**kwargs)
+            at = alto.build(x, n_partitions=32)
+            plan, report = autotune.tune_plan(
+                at, RANK, backend="pallas",
+                max_candidates=6 if quick else 12,
+                store_path=store)
+            for mr in report.modes:
+                s, b = mr.static, mr.best
+                emit(f"autotune/{name}/mode{mr.mode}/static",
+                     s.median_s * 1e6,
+                     f"traversal={s.traversal};r_block={s.r_block};"
+                     f"block_m={s.block_m}")
+                emit(f"autotune/{name}/mode{mr.mode}/measured",
+                     b.median_s * 1e6,
+                     f"traversal={b.traversal};r_block={b.r_block};"
+                     f"block_m={b.block_m};"
+                     f"candidates={len(mr.candidates)}")
+                assert b.median_s <= s.median_s, (name, mr.mode)
+            runs = ops.timing_runs()
+            again = plan_mod.make_plan(at.meta, RANK, backend="pallas",
+                                       tune="force", store_path=store)
+            hit = again == plan and ops.timing_runs() == runs
+            emit(f"autotune/{name}/store_hit", 0.0,
+                 f"identical={hit};timing_runs=0")
+            assert hit, f"store round-trip failed for {name}"

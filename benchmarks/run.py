@@ -12,10 +12,10 @@ def main() -> None:
                     help="smaller tensors / fewer cases")
     ap.add_argument("--only", default="",
                     help="comma list: mttkrp,cpapr,storage,format,"
-                         "kernels,roofline,dist")
+                         "kernels,roofline,dist,autotune")
     args = ap.parse_args()
 
-    from benchmarks import (bench_cpapr, bench_dist,
+    from benchmarks import (bench_autotune, bench_cpapr, bench_dist,
                             bench_format_generation, bench_kernels,
                             bench_mttkrp_formats, bench_roofline,
                             bench_storage)
@@ -28,6 +28,7 @@ def main() -> None:
         "kernels": bench_kernels.run,            # Pallas hot-spots
         "roofline": bench_roofline.run,          # EXPERIMENTS §Roofline
         "dist": bench_dist.run,                  # docs/distributed.md
+        "autotune": bench_autotune.run,          # docs/autotuning.md
     }
     wanted = [s for s in args.only.split(",") if s] or list(suites)
 

@@ -4,12 +4,13 @@ from repro.core.encoding import AltoEncoding, make_encoding
 from repro.core.alto import (AltoTensor, AltoMeta, OrientedView, build,
                              oriented_view, linearize, delinearize,
                              to_sparse)
-from repro.core import heuristics, mttkrp, plan, cpals, cpapr
+from repro.core import autotune, heuristics, mttkrp, plan, cpals, cpapr
 from repro.core.plan import ExecutionPlan, ModePlan, make_plan
+from repro.core.autotune import tune_plan
 
 __all__ = [
     "AltoEncoding", "make_encoding", "AltoTensor", "AltoMeta",
     "OrientedView", "build", "oriented_view", "linearize", "delinearize",
-    "to_sparse", "heuristics", "mttkrp", "plan", "cpals", "cpapr",
-    "ExecutionPlan", "ModePlan", "make_plan",
+    "to_sparse", "autotune", "heuristics", "mttkrp", "plan", "cpals",
+    "cpapr", "ExecutionPlan", "ModePlan", "make_plan", "tune_plan",
 ]

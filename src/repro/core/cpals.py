@@ -116,9 +116,13 @@ def cp_als(at: AltoTensor, rank: int, n_iters: int = 50, tol: float = 1e-5,
            seed: int = 0, views: dict[int, OrientedView] | None = None,
            factors: list[jnp.ndarray] | None = None,
            plan: plan_mod.ExecutionPlan | None = None,
-           gram_fn=None) -> CpalsResult:
+           gram_fn=None, tune: str = "off") -> CpalsResult:
+    """CP-ALS driver. ``tune`` ("off"|"auto"|"force") selects measured
+    plans from the autotuner's persistent store — the tensor data is in
+    hand here, so a store miss under "auto"/"force" runs the measured
+    tuner (`core.autotune`) before the first sweep."""
     if plan is None:
-        plan = plan_mod.make_plan(at.meta, rank)
+        plan = plan_mod.make_plan(at.meta, rank, tune=tune, at=at)
     elif plan.rank != rank:
         raise ValueError(f"plan was built for rank {plan.rank}, "
                          f"cp_als called with rank {rank}")

@@ -143,12 +143,18 @@ def cp_apr(at: AltoTensor, rank: int, params: CpaprParams | None = None,
            seed: int = 0, pi_policy: str | None = None,
            views: dict[int, OrientedView] | None = None,
            track_ll: bool = False,
-           plan: plan_mod.ExecutionPlan | None = None) -> CpaprResult:
+           plan: plan_mod.ExecutionPlan | None = None,
+           tune: str = "off") -> CpaprResult:
     """CP-APR MU driver (Alg. 2). `pi_policy`: None=adaptive|'pre'|'otf'.
 
     All kernel routing (traversal per mode, Π policy, jnp vs Pallas) comes
     from ``plan``; the default plan resolves the paper heuristics with the
-    reference backend on CPU and the Pallas backend on TPU.
+    reference backend on CPU and the Pallas backend on TPU. ``tune``
+    ("off"|"auto"|"force") swaps the analytic plan for a measured one
+    from the autotuner's persistent store (`core.autotune`), timing
+    candidates here if the store misses — the tensor data is in hand.
+    CP-APR tunes against the fused Φ kernel (objective="phi"), its >99%
+    bottleneck, under a store key distinct from CP-ALS's MTTKRP plans.
     """
     p = params or CpaprParams()
     N = len(at.dims)
@@ -157,7 +163,8 @@ def cp_apr(at: AltoTensor, rank: int, params: CpaprParams | None = None,
                                 dtype=at.values.dtype)
 
     if plan is None:
-        plan = plan_mod.make_plan(at.meta, rank)
+        plan = plan_mod.make_plan(at.meta, rank, tune=tune,
+                                  tune_objective="phi", at=at)
     elif plan.rank != rank:
         raise ValueError(f"plan was built for rank {plan.rank}, "
                          f"cp_apr called with rank {rank}")

@@ -60,6 +60,20 @@ def choose_traversal(meta: AltoMeta, mode: int) -> Traversal:
     return Traversal.OUTPUT_ORIENTED
 
 
+def candidate_traversals(meta: AltoMeta, mode: int) -> tuple[Traversal, ...]:
+    """Both traversals, static choice first.
+
+    The measured autotuner (`core.autotune`) re-ranks this candidate list
+    by timing; the static heuristic survives as the *prior* — it orders
+    the candidates (so a capped search keeps the analytic choice) and
+    remains the answer whenever no measurement is available.
+    """
+    first = choose_traversal(meta, mode)
+    second = (Traversal.OUTPUT_ORIENTED if first is Traversal.RECURSIVE
+              else Traversal.RECURSIVE)
+    return (first, second)
+
+
 def choose_pi_policy(meta: AltoMeta, rank: int, value_bytes: int = 4,
                      fast_mem_bytes: int = DEFAULT_FAST_MEM_BYTES
                      ) -> PiPolicy:

@@ -39,6 +39,21 @@ The plan answers four questions the call sites used to guess at:
 Because `ExecutionPlan` is hashable (``jax.sharding.Mesh`` included) it can
 travel as a static jit argument and doubles as the key of the
 compiled-executable cache in `kernels.ops`.
+
+Two refinements over the original analytic model:
+
+  * **Φ-specific footprints** — the fused CP-APR Φ kernels run at FULL
+    rank with the whole (I_mode, R) B operand resident per grid step
+    (plus the gathered block rows, and under ALTO-OTF the whole other
+    factors); `phi_oriented_vmem_bytes` / `phi_recursive_vmem_bytes`
+    account for that and co-constrain `choose_block_m`, closing the
+    VMEM model gap the ROADMAP flagged (B resident but unbudgeted).
+  * **measured plans** — ``make_plan(..., tune="auto"|"force")`` swaps
+    the analytic answer for a measured one: `core.autotune` times every
+    feasible candidate (`candidate_mode_plans`, static choice first)
+    through the compiled-executable cache and persists winners in a
+    versioned on-disk plan store, so later processes get the measured
+    plan back with zero timing runs.
 """
 from __future__ import annotations
 
@@ -70,7 +85,8 @@ class ModePlan:
     r_block: int        # rank tile (always divides the plan rank)
     block_m: int        # oriented-kernel nonzero block (power of two)
     temp_rows: int      # recursive Temp height (static VMEM bound)
-    vmem_bytes: int     # estimated per-grid-step footprint of the choice
+    vmem_bytes: int     # estimated per-grid-step footprint (MTTKRP kernel)
+    phi_vmem_bytes: int = 0   # fused Φ kernel footprint (full rank, B resident)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,6 +171,77 @@ def oriented_vmem_bytes(meta: AltoMeta, mode: int, block_m: int,
     return words + rows + values + onehot + contrib + factors
 
 
+def phi_oriented_vmem_bytes(meta: AltoMeta, mode: int, block_m: int,
+                            rank: int, dtype_bytes: int = 4,
+                            pre_pi: bool = False) -> int:
+    """Per-grid-step VMEM of the *oriented fused Φ* kernel — full rank.
+
+    The Φ kernel has no rank tiling (the denominator ``<B[i_n,:], krp>``
+    needs the full rank per element) and keeps the whole ``(I_mode, R)``
+    B operand resident every grid step, plus the gathered ``(block_m, R)``
+    B rows — the two terms the old MTTKRP-shaped model omitted (the
+    ROADMAP-flagged VMEM model gap).  Term by term:
+
+    * ``rows``/``words``/``values`` stream tiles;
+    * the ``(block_m, block_m)`` in-block segment one-hot;
+    * **resident B**: ``I_mode·R`` (whole factor, every step);
+    * **gathered B rows**: ``block_m·R``;
+    * krp + contrib intermediates: ``2·block_m·R``;
+    * the per-block segment-sum output tile: ``block_m·R``;
+    * Π operand: the streamed ``(block_m, R)`` Π tile under ALTO-PRE, or
+      the *fully resident* other factors (``Σ_{m≠mode} I_m·R``) under
+      ALTO-OTF (the kernel's BlockSpecs load them whole, not r_block-wide).
+    """
+    W = meta.enc.n_words
+    words = block_m * W * 4
+    rows = block_m * 4
+    values = block_m * dtype_bytes
+    onehot = block_m * block_m * dtype_bytes
+    b_resident = meta.dims[mode] * rank * dtype_bytes
+    b_rows = block_m * rank * dtype_bytes
+    krp_contrib = 2 * block_m * rank * dtype_bytes
+    out = block_m * rank * dtype_bytes
+    if pre_pi:
+        operands = block_m * rank * dtype_bytes
+    else:
+        operands = sum(I for m, I in enumerate(meta.dims)
+                       if m != mode) * rank * dtype_bytes
+    return (words + rows + values + onehot + b_resident + b_rows
+            + krp_contrib + out + operands)
+
+
+def phi_recursive_vmem_bytes(meta: AltoMeta, mode: int, rank: int,
+                             dtype_bytes: int = 4,
+                             pre_pi: bool = False) -> int:
+    """Per-grid-step VMEM of the *recursive fused Φ* kernel — full rank.
+
+    Same accounting as :func:`phi_oriented_vmem_bytes` with the oriented
+    stream tiles replaced by the partition chunk, the segment one-hot by
+    the ``(chunk, T)`` Temp one-hot, and the output by the ``(T, R)``
+    partition Temp.  Nothing here is tunable (chunk is fixed by the
+    partition count, Φ runs full rank), so this footprint is advisory —
+    it is reported in the plan and used by the per-shard budget checks,
+    but cannot be shrunk by blocking.
+    """
+    chunk = _chunk_rows(meta)
+    T = meta.temp_rows[mode]
+    W = meta.enc.n_words
+    words = chunk * W * 4
+    values = chunk * dtype_bytes
+    onehot = chunk * T * dtype_bytes
+    b_resident = meta.dims[mode] * rank * dtype_bytes
+    b_rows = chunk * rank * dtype_bytes
+    krp_contrib = 2 * chunk * rank * dtype_bytes
+    temp = T * rank * dtype_bytes
+    if pre_pi:
+        operands = chunk * rank * dtype_bytes
+    else:
+        operands = sum(I for m, I in enumerate(meta.dims)
+                       if m != mode) * rank * dtype_bytes
+    return (words + values + onehot + b_resident + b_rows + krp_contrib
+            + temp + operands)
+
+
 def _divisors_desc(n: int) -> list[int]:
     out = [d for d in range(1, n + 1) if n % d == 0]
     return out[::-1]
@@ -195,17 +282,56 @@ def choose_rank_block_oriented(meta: AltoMeta, mode: int, rank: int,
 
 def choose_block_m(meta: AltoMeta, mode: int, r_block: int,
                    dtype_bytes: int = 4,
-                   vmem_limit: int = VMEM_BYTES) -> int:
-    """Largest power-of-two nonzero block for the oriented kernel.
+                   vmem_limit: int = VMEM_BYTES,
+                   rank: int | None = None,
+                   pre_pi: bool = False) -> int:
+    """Largest power-of-two nonzero block for the oriented kernels.
 
     The oriented stream is padded to a multiple of block_m by `ops`, so the
-    choice is free of divisibility constraints on nnz.
+    choice is free of divisibility constraints on nnz.  When ``rank`` is
+    given the block must also fit the *fused Φ* kernel's footprint
+    (:func:`phi_oriented_vmem_bytes` — full rank, resident B): the same
+    ``ModePlan.block_m`` feeds both the MTTKRP and the Φ kernel, so the
+    block is sized for whichever is hungrier.  The Φ constraint only
+    applies while it is *satisfiable* (fits at ``MIN_BLOCK_M``): on a
+    huge mode the resident ``I_mode·R`` B term alone can exceed any
+    budget, and shrinking the block cannot fix that — Φ spills
+    regardless, so the unsatisfiable constraint must not drag the
+    MTTKRP kernel (which never keeps B resident) down to the minimum
+    block.  If even ``MIN_BLOCK_M`` overflows the budget is advisory
+    and ``MIN_BLOCK_M`` is returned (the kernel still compiles, just
+    spills — same contract as `choose_rank_block`).
     """
+    phi_binding = rank is not None and phi_constraint_active(
+        meta, mode, rank, dtype_bytes, vmem_limit, pre_pi=pre_pi)
+
+    def fits(bm: int) -> bool:
+        if oriented_vmem_bytes(meta, mode, bm, r_block,
+                               dtype_bytes) > vmem_limit:
+            return False
+        if phi_binding and phi_oriented_vmem_bytes(
+                meta, mode, bm, rank, dtype_bytes,
+                pre_pi=pre_pi) > vmem_limit:
+            return False
+        return True
+
     bm = MAX_BLOCK_M
-    while bm > MIN_BLOCK_M and oriented_vmem_bytes(
-            meta, mode, bm, r_block, dtype_bytes) > vmem_limit:
+    while bm > MIN_BLOCK_M and not fits(bm):
         bm //= 2
     return bm
+
+
+def phi_constraint_active(meta: AltoMeta, mode: int, rank: int,
+                          dtype_bytes: int = 4,
+                          vmem_limit: int = VMEM_BYTES,
+                          pre_pi: bool = False) -> bool:
+    """True iff the fused-Φ footprint can fit the budget at all for this
+    mode (at ``MIN_BLOCK_M``) — i.e. the Φ constraint is binding rather
+    than vacuous.  An unsatisfiable Φ budget is advisory (the kernel
+    spills at any block size) and must not throttle the MTTKRP tiling."""
+    return phi_oriented_vmem_bytes(meta, mode, MIN_BLOCK_M, rank,
+                                   dtype_bytes,
+                                   pre_pi=pre_pi) <= vmem_limit
 
 
 # ---------------------------------------------------------------------------
@@ -218,11 +344,126 @@ def default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "reference"
 
 
+def _mode_plan(meta: AltoMeta, mode: int, rank: int,
+               traversal: heuristics.Traversal, r_block: int, block_m: int,
+               dtype_bytes: int, pre_pi: bool) -> ModePlan:
+    """Assemble a ModePlan with both kernel footprints filled in."""
+    vm = (recursive_vmem_bytes(meta, mode, r_block, dtype_bytes)
+          if traversal is heuristics.Traversal.RECURSIVE
+          else oriented_vmem_bytes(meta, mode, block_m, r_block,
+                                   dtype_bytes))
+    phi_vm = (phi_recursive_vmem_bytes(meta, mode, rank, dtype_bytes,
+                                       pre_pi=pre_pi)
+              if traversal is heuristics.Traversal.RECURSIVE
+              else phi_oriented_vmem_bytes(meta, mode, block_m, rank,
+                                           dtype_bytes, pre_pi=pre_pi))
+    return ModePlan(mode=mode, traversal=traversal, r_block=r_block,
+                    block_m=block_m, temp_rows=meta.temp_rows[mode],
+                    vmem_bytes=vm, phi_vmem_bytes=phi_vm)
+
+
+def static_mode_plan(meta: AltoMeta, mode: int, rank: int, *,
+                     dtype_bytes: int = 4, vmem_limit: int = VMEM_BYTES,
+                     force_oriented: bool = False,
+                     pre_pi: bool = False) -> ModePlan:
+    """The analytic-model choice for one mode (the pre-autotune answer)."""
+    traversal = (heuristics.Traversal.OUTPUT_ORIENTED if force_oriented
+                 else heuristics.choose_traversal(meta, mode))
+    # Budget the rank tile against the kernel that will actually run:
+    # the recursive Temp model would throttle oriented modes (huge
+    # partition intervals, or any mesh plan) for no VMEM benefit.
+    if traversal is heuristics.Traversal.RECURSIVE:
+        rb = choose_rank_block(meta, mode, rank, dtype_bytes, vmem_limit)
+    else:
+        rb = choose_rank_block_oriented(meta, mode, rank, dtype_bytes,
+                                        vmem_limit)
+    bm = choose_block_m(meta, mode, rb, dtype_bytes, vmem_limit,
+                        rank=rank, pre_pi=pre_pi)
+    return _mode_plan(meta, mode, rank, traversal, rb, bm, dtype_bytes,
+                      pre_pi)
+
+
+def candidate_mode_plans(meta: AltoMeta, mode: int, rank: int, *,
+                         dtype_bytes: int = 4,
+                         vmem_limit: int = VMEM_BYTES,
+                         force_oriented: bool = False,
+                         pre_pi: bool = False,
+                         max_candidates: int | None = None
+                         ) -> tuple[ModePlan, ...]:
+    """The feasible tiling space for one mode, static choice FIRST.
+
+    Enumerates traversal × ``r_block`` × ``block_m`` and prunes by the
+    corrected per-kernel footprints: a candidate survives only if its
+    MTTKRP footprint fits the budget AND its fused-Φ footprint
+    (:func:`phi_oriented_vmem_bytes`, full-rank resident B) fits too —
+    except that the static choice is always kept even when nothing fits
+    (some plan must exist; the budget is advisory then, as everywhere).
+
+    The static (analytic-model) choice is element 0 so a capped search
+    (``max_candidates``) can never lose it — the measured winner is then
+    *never worse than the static model under the measurement*, which is
+    the autotuner's acceptance condition.
+    """
+    static = static_mode_plan(meta, mode, rank, dtype_bytes=dtype_bytes,
+                              vmem_limit=vmem_limit,
+                              force_oriented=force_oriented, pre_pi=pre_pi)
+    out: list[ModePlan] = [static]
+    seen = {(static.traversal, static.r_block, static.block_m)}
+
+    def add(traversal, rb, bm):
+        key = (traversal, rb, bm)
+        if key in seen:
+            return
+        seen.add(key)
+        out.append(_mode_plan(meta, mode, rank, traversal, rb, bm,
+                              dtype_bytes, pre_pi))
+
+    traversals = ((heuristics.Traversal.OUTPUT_ORIENTED,) if force_oriented
+                  else heuristics.candidate_traversals(meta, mode))
+    for traversal in traversals:
+        if traversal is heuristics.Traversal.RECURSIVE:
+            # block_m is dead for the recursive kernel; keep the static
+            # block so candidates differ only in what the kernel reads.
+            for rb in _divisors_desc(rank):
+                if recursive_vmem_bytes(meta, mode, rb,
+                                        dtype_bytes) <= vmem_limit:
+                    add(traversal, rb, static.block_m)
+        else:
+            # Same binding-vs-vacuous rule as choose_block_m: an
+            # unsatisfiable Φ budget must not hide the larger MTTKRP
+            # blocks from the tuner.
+            phi_binding = phi_constraint_active(meta, mode, rank,
+                                                dtype_bytes, vmem_limit,
+                                                pre_pi=pre_pi)
+            for rb in _divisors_desc(rank):
+                if oriented_vmem_bytes(meta, mode, MIN_BLOCK_M, rb,
+                                       dtype_bytes) > vmem_limit:
+                    continue
+                bm = MAX_BLOCK_M
+                while bm >= MIN_BLOCK_M:
+                    if (oriented_vmem_bytes(meta, mode, bm, rb,
+                                            dtype_bytes) <= vmem_limit
+                            and not (phi_binding and
+                                     phi_oriented_vmem_bytes(
+                                         meta, mode, bm, rank,
+                                         dtype_bytes,
+                                         pre_pi=pre_pi) > vmem_limit)):
+                        add(traversal, rb, bm)
+                    bm //= 2
+    if max_candidates is not None and len(out) > max_candidates:
+        out = out[:max_candidates]
+    return tuple(out)
+
+
 def make_plan(meta: AltoMeta, rank: int, *, backend: str | None = None,
               interpret: bool | None = None, dtype_bytes: int = 4,
               vmem_limit: int = VMEM_BYTES,
               fast_mem_bytes: int = heuristics.DEFAULT_FAST_MEM_BYTES,
-              mesh: jax.sharding.Mesh | None = None) -> ExecutionPlan:
+              mesh: jax.sharding.Mesh | None = None,
+              tune: str = "off",
+              tune_objective: str = "mttkrp",
+              at: "AltoTensor | None" = None,
+              store_path=None) -> ExecutionPlan:
     """Resolve heuristics + static meta into a concrete execution plan.
 
     With ``mesh=`` the plan becomes mesh-bearing: every mode is forced to
@@ -232,41 +473,64 @@ def make_plan(meta: AltoMeta, rank: int, *, backend: str | None = None,
     and the VMEM budget is divided by the shard count (see module
     docstring), so the shard-local Pallas tiles are sized for the
     per-device slice of the stream.
+
+    ``tune`` selects between the analytic model and measured plans
+    (`core.autotune`, persisted in the on-disk plan store):
+
+    * ``"off"`` (default) — the static analytic plan, exactly as before;
+    * ``"auto"`` — return the stored measured plan if the store has one
+      for this (meta, rank, backend, shard count, jax version); else run
+      the tuner if the tensor data ``at=`` was provided (and persist the
+      winner); else fall back to the static plan;
+    * ``"force"`` — like ``"auto"`` but never silently fall back: a store
+      miss with no ``at=`` raises, so the caller knows it is NOT running
+      a measured plan.
+
+    ``tune_objective`` names the kernel the measurement ranks by —
+    ``"mttkrp"`` (CP-ALS, the default) or ``"phi"`` (CP-APR; `cp_apr`
+    passes this) — and is part of the store key: the two objectives
+    crown different winners and never overwrite each other.
+
+    A store hit costs **zero timing runs** — the measured plan
+    round-trips across processes through the store file
+    (``$REPRO_PLAN_CACHE`` or ``~/.cache/repro/plans.json``).
     """
     backend = backend or default_backend()
     if backend not in ("pallas", "reference"):
         raise ValueError(f"unknown backend {backend!r}")
+    if tune not in ("off", "auto", "force"):
+        raise ValueError(f"unknown tune mode {tune!r}")
+    if tune != "off":
+        from repro.core import autotune
+        tuned = autotune.tuned_plan(
+            meta, rank, backend=backend, interpret=interpret,
+            dtype_bytes=dtype_bytes, vmem_limit=vmem_limit,
+            fast_mem_bytes=fast_mem_bytes, mesh=mesh, at=at,
+            require=(tune == "force"), objective=tune_objective,
+            store_path=store_path)
+        if tuned is not None:
+            return tuned
     n_shards = 1
     if mesh is not None:
         n_shards = int(mesh.shape[mesh.axis_names[0]])
         vmem_limit = max(1, vmem_limit // n_shards)
-    modes = []
-    for n in range(meta.enc.ndim):
-        traversal = (heuristics.Traversal.OUTPUT_ORIENTED if mesh is not None
-                     else heuristics.choose_traversal(meta, n))
-        # Budget the rank tile against the kernel that will actually run:
-        # the recursive Temp model would throttle oriented modes (huge
-        # partition intervals, or any mesh plan) for no VMEM benefit.
-        if traversal is heuristics.Traversal.RECURSIVE:
-            rb = choose_rank_block(meta, n, rank, dtype_bytes, vmem_limit)
-        else:
-            rb = choose_rank_block_oriented(meta, n, rank, dtype_bytes,
-                                            vmem_limit)
-        bm = choose_block_m(meta, n, rb, dtype_bytes, vmem_limit)
-        vm = (recursive_vmem_bytes(meta, n, rb, dtype_bytes)
-              if traversal is heuristics.Traversal.RECURSIVE
-              else oriented_vmem_bytes(meta, n, bm, rb, dtype_bytes))
-        modes.append(ModePlan(mode=n, traversal=traversal, r_block=rb,
-                              block_m=bm, temp_rows=meta.temp_rows[n],
-                              vmem_bytes=vm))
     pi_policy = heuristics.choose_pi_policy(
         meta, rank, value_bytes=dtype_bytes, fast_mem_bytes=fast_mem_bytes)
+    modes = tuple(
+        static_mode_plan(meta, n, rank, dtype_bytes=dtype_bytes,
+                         vmem_limit=vmem_limit,
+                         force_oriented=mesh is not None,
+                         pre_pi=pi_policy is heuristics.PiPolicy.PRE)
+        for n in range(meta.enc.ndim))
     return ExecutionPlan(meta=meta, rank=rank, backend=backend,
                          interpret=interpret, pi_policy=pi_policy,
-                         modes=tuple(modes), mesh=mesh)
+                         modes=modes, mesh=mesh)
 
 
 def plan_for(at: AltoTensor, rank: int, **kwargs) -> ExecutionPlan:
+    """`make_plan` from a built tensor; tensor data rides along so
+    ``plan_for(at, rank, tune="auto")`` can run the measured tuner."""
+    kwargs.setdefault("at", at)
     return make_plan(at.meta, rank, **kwargs)
 
 

@@ -241,7 +241,8 @@ def distributed_cp_als(x: SparseTensor | AltoTensor, rank: int, mesh, *,
                        n_iters: int = 50, tol: float = 1e-5, seed: int = 0,
                        n_partitions: int | None = None,
                        backend: str | None = None,
-                       interpret: bool | None = None):
+                       interpret: bool | None = None,
+                       tune: str = "off"):
     """CP-ALS with MTTKRP and Grams sharded over ``mesh`` (GPipe's sibling
     seam: data-parallel over the nonzero stream, model-replicated factors).
 
@@ -251,6 +252,16 @@ def distributed_cp_als(x: SparseTensor | AltoTensor, rank: int, mesh, *,
     sweep's Gram hook. The only deltas from single-device are reduction
     order (shard partials added by psum), so fits match to well under
     1e-3. Returns ``(lam, factors, fits)``.
+
+    Per-shard tile budgets come from the plan layer's corrected
+    per-kernel footprints: `make_plan(mesh=...)` divides the VMEM budget
+    by the shard count and sizes ``block_m`` against BOTH the oriented
+    MTTKRP footprint and the fused Φ footprint (full-rank resident B,
+    `plan.phi_oriented_vmem_bytes`), so shard-local blocks stay honest on
+    big modes where B dominates. ``tune`` ("off"|"auto"|"force") swaps
+    the analytic mesh plan for a measured one: the autotuner times the
+    *actual sharded executables* per candidate and persists the winner
+    keyed on the shard count (`core.autotune`).
     """
     if isinstance(x, AltoTensor):
         at = x
@@ -258,7 +269,8 @@ def distributed_cp_als(x: SparseTensor | AltoTensor, rank: int, mesh, *,
         D = int(mesh.shape[mesh.axis_names[0]])
         at = alto.build(x, n_partitions=n_partitions or D)
     plan = plan_mod.make_plan(at.meta, rank, backend=backend,
-                              interpret=interpret, mesh=mesh)
+                              interpret=interpret, mesh=mesh,
+                              tune=tune, at=at)
     res = cpals.cp_als(at, rank, n_iters=n_iters, tol=tol, seed=seed,
                        plan=plan,
                        gram_fn=functools.partial(sharded_gram, mesh))

@@ -23,6 +23,7 @@ subsequent calls hit jit's C++ fast path.
 """
 from __future__ import annotations
 
+import time
 from typing import Callable
 
 import jax
@@ -63,6 +64,46 @@ def cache_size() -> int:
 
 def cache_clear() -> None:
     _EXEC_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# Timing hook (the autotuner's measurement primitive)
+# ---------------------------------------------------------------------------
+
+_TIMING_RUNS = 0
+
+
+def timing_runs() -> int:
+    """Number of `median_time` measurements taken in this process.
+
+    `core.autotune` uses this to prove plan-store hits are measurement
+    free: loading a persisted plan must leave the counter untouched.
+    """
+    return _TIMING_RUNS
+
+
+def median_time(fn: Callable, *args, warmup: int = 1,
+                iters: int = 3) -> float:
+    """Median wall-clock seconds of a blocking call, after warmup.
+
+    The autotuner's timing hook on the cached executables: ``fn`` is one
+    of the public wrappers above (or any callable ending in a jitted
+    call), so the warmup runs absorb compilation + the executable-cache
+    fill and the timed iterations hit jit's C++ fast path. Median of
+    ``iters`` (not best-of) so one descheduled run cannot crown a wrong
+    candidate on a noisy host.
+    """
+    global _TIMING_RUNS
+    _TIMING_RUNS += 1
+    for _ in range(max(0, warmup)):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,309 @@
+"""Measured plan autotuner + persistent plan store (core/autotune.py).
+
+End-to-end in interpret mode with a tmpdir store, plus the store's
+failure-mode contract: corrupted / stale-version cache files are ignored
+(never fatal), the ``REPRO_PLAN_CACHE`` override is respected, store hits
+cost zero timing runs even from a fresh process, and tuned plans hash and
+hit the executable cache exactly like static ones (no retrace).
+Serialization round-trips are property-tested on the hermetic
+``tests/proptest.py`` harness.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import given, settings, strategies as st
+from repro.core import alto, autotune, heuristics, plan as plan_mod
+from repro.kernels import ops
+from repro.sparse import synthetic
+
+RANK = 6
+
+
+@pytest.fixture
+def store(tmp_path, monkeypatch):
+    """Point the plan store at a tmpdir (and prove the env override is
+    what the tuner actually honors — there is no other path in play)."""
+    path = tmp_path / "plans.json"
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(path))
+    return path
+
+
+def _tensor(seed=3, dims=(13, 7, 5), nnz=97):
+    x = synthetic.uniform_tensor(dims, nnz, seed=seed)
+    return alto.build(x, n_partitions=4)
+
+
+def _tune(at, rank=RANK, **kw):
+    kw.setdefault("backend", "pallas")
+    kw.setdefault("interpret", True)
+    kw.setdefault("max_candidates", 5)
+    return autotune.tune_plan(at, rank, **kw)
+
+
+class TestTunerEndToEnd:
+    def test_winner_is_a_feasible_candidate(self, store):
+        at = _tensor()
+        plan, report = _tune(at)
+        assert store.exists()
+        for mp in plan.modes:
+            assert RANK % mp.r_block == 0
+            assert plan_mod.MIN_BLOCK_M <= mp.block_m <= plan_mod.MAX_BLOCK_M
+            assert mp.phi_vmem_bytes > 0
+        # the winner must reproduce the reference result exactly like any
+        # other plan — tuning changes tiles, never math
+        from repro.core import mttkrp as cm
+        rng = np.random.default_rng(0)
+        factors = [jnp.asarray(rng.standard_normal((I, RANK))
+                               .astype(np.float32)) for I in at.dims]
+        views = plan_mod.build_views(at, plan)
+        x = alto.to_sparse(at)
+        for mode in range(3):
+            got = plan_mod.execute_mttkrp(plan, at, views, factors, mode)
+            ref = cm.dense_mttkrp_reference(x.todense(), factors, mode)
+            scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+            assert float(jnp.max(jnp.abs(got - ref))) / scale < 1e-5
+
+    def test_measured_never_slower_than_static(self, store):
+        _, report = _tune(_tensor())
+        for mr in report.modes:
+            assert mr.best.median_s <= mr.static.median_s
+            assert mr.candidates[0].is_static
+            assert sum(c.is_static for c in mr.candidates) == 1
+
+    def test_phi_objective_collapses_rank_tiles(self, store):
+        at = _tensor(dims=(19, 23, 11), nnz=300)
+        plan, report = _tune(at, rank=4, objective="phi")
+        for mr in report.modes:
+            keys = [(c.traversal, c.block_m) for c in mr.candidates]
+            assert len(keys) == len(set(keys))   # r_block duplicates gone
+
+    def test_force_roundtrip_zero_timing_runs(self, store):
+        at = _tensor()
+        plan, _ = _tune(at)
+        runs = ops.timing_runs()
+        again = plan_mod.make_plan(at.meta, RANK, backend="pallas",
+                                   interpret=True, tune="force")
+        assert ops.timing_runs() == runs
+        assert again == plan and hash(again) == hash(plan)
+
+    def test_force_miss_without_data_raises(self, store):
+        at = _tensor(seed=11)
+        with pytest.raises(ValueError, match="force"):
+            plan_mod.make_plan(at.meta, RANK, backend="pallas",
+                               interpret=True, tune="force")
+
+    def test_auto_miss_without_data_falls_back_to_static(self, store):
+        at = _tensor(seed=12)
+        runs = ops.timing_runs()
+        plan = plan_mod.make_plan(at.meta, RANK, backend="pallas",
+                                  interpret=True, tune="auto")
+        static = plan_mod.make_plan(at.meta, RANK, backend="pallas",
+                                    interpret=True)
+        assert plan == static and ops.timing_runs() == runs
+
+    def test_drivers_accept_tune(self, store, monkeypatch):
+        monkeypatch.setattr(autotune, "DEFAULT_MAX_CANDIDATES", 4)
+        at = _tensor(dims=(12, 10, 8), nnz=120)
+        from repro.core import cpals
+        res = cpals.cp_als(at, RANK, n_iters=2, seed=1, tune="auto")
+        assert res.plan is not None and store.exists()
+        # second driver call reuses the stored plan without re-timing
+        runs = ops.timing_runs()
+        res2 = cpals.cp_als(at, RANK, n_iters=2, seed=1, tune="force")
+        assert ops.timing_runs() == runs
+        assert res2.plan == res.plan
+        assert np.allclose(res2.fits, res.fits)
+
+    def test_cpals_and_cpapr_tune_under_distinct_keys(self, store,
+                                                      monkeypatch):
+        """cp_als tunes against MTTKRP, cp_apr against Φ — the two
+        measurements must land under different store keys, never
+        overwriting each other."""
+        monkeypatch.setattr(autotune, "DEFAULT_MAX_CANDIDATES", 3)
+        x, _ = synthetic.lowrank_count((12, 10, 8), rank=2,
+                                       nnz_target=150, seed=5)
+        at = alto.build(x, n_partitions=2)
+        from repro.core import cpals, cpapr
+        cpals.cp_als(at, 4, n_iters=1, tune="auto")
+        cpapr.cp_apr(at, 4, params=cpapr.CpaprParams(k_max=1),
+                     tune="auto")
+        plans = json.loads(store.read_text())["plans"]
+        assert len(plans) == 2
+        assert {rec["tuned"]["objective"] for rec in plans.values()} \
+            == {"mttkrp", "phi"}
+
+
+class TestSecondProcess:
+    def test_identical_plan_across_processes(self, store):
+        """The acceptance criterion: tune in process A, then process B's
+        ``make_plan(tune="force")`` returns the identical measured plan
+        with zero timing runs in that process."""
+        script = r"""
+import json, sys
+from repro.core import alto, autotune, plan as plan_mod
+from repro.kernels import ops
+from repro.sparse import synthetic
+
+at = alto.build(synthetic.uniform_tensor((13, 7, 5), 97, seed=3),
+                n_partitions=4)
+if sys.argv[1] == "tune":
+    plan, _ = autotune.tune_plan(at, 6, backend="pallas", interpret=True,
+                                 max_candidates=5)
+else:
+    plan = plan_mod.make_plan(at.meta, 6, backend="pallas",
+                              interpret=True, tune="force")
+    assert ops.timing_runs() == 0, "store hit must not time anything"
+print("PLAN_JSON=" + json.dumps(autotune.serialize_plan(plan)))
+"""
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src"
+        env["REPRO_PLAN_CACHE"] = str(store)
+        out = {}
+        for phase in ("tune", "load"):
+            r = subprocess.run([sys.executable, "-c", script, phase],
+                               capture_output=True, text=True, env=env,
+                               timeout=600)
+            assert r.returncode == 0, r.stdout + r.stderr
+            line = [ln for ln in r.stdout.splitlines()
+                    if ln.startswith("PLAN_JSON=")][0]
+            out[phase] = json.loads(line[len("PLAN_JSON="):])
+        assert out["tune"] == out["load"]
+
+
+class TestStoreRobustness:
+    def test_corrupted_store_is_ignored_not_fatal(self, store):
+        store.write_text("{this is not json")
+        at = _tensor()
+        assert autotune.load_store() == {}
+        plan, _ = _tune(at)        # re-tunes and overwrites
+        assert json.loads(store.read_text())["version"] \
+            == autotune.PLAN_STORE_VERSION
+        assert plan_mod.make_plan(at.meta, RANK, backend="pallas",
+                                  interpret=True, tune="force") == plan
+
+    def test_stale_version_is_ignored_not_fatal(self, store):
+        at = _tensor()
+        plan, report = _tune(at)
+        payload = json.loads(store.read_text())
+        payload["version"] = autotune.PLAN_STORE_VERSION + 1
+        store.write_text(json.dumps(payload))
+        assert autotune.load_store() == {}          # stale == empty
+        # auto without data: silent static fallback, no crash, no timing
+        runs = ops.timing_runs()
+        plan_mod.make_plan(at.meta, RANK, backend="pallas",
+                           interpret=True, tune="auto")
+        assert ops.timing_runs() == runs
+
+    def test_malformed_entry_is_a_miss(self, store):
+        at = _tensor()
+        _tune(at)
+        payload = json.loads(store.read_text())
+        key = next(iter(payload["plans"]))
+        payload["plans"][key]["modes"][0]["r_block"] = 5   # !| rank 6
+        store.write_text(json.dumps(payload))
+        assert autotune.lookup(at.meta, RANK, backend="pallas") is None
+
+    def test_env_override_respected(self, tmp_path, monkeypatch):
+        override = tmp_path / "elsewhere" / "cache.json"
+        monkeypatch.setenv("REPRO_PLAN_CACHE", str(override))
+        assert autotune.store_path() == override
+        _tune(_tensor())
+        assert override.exists()
+        monkeypatch.delenv("REPRO_PLAN_CACHE")
+        assert autotune.store_path() == \
+            autotune.store_path(autotune.DEFAULT_STORE)
+
+    def test_tuned_plans_cache_without_retrace(self, store):
+        at = _tensor()
+        plan, _ = _tune(at)
+        stored = plan_mod.make_plan(at.meta, RANK, backend="pallas",
+                                    interpret=True, tune="auto")
+        assert stored == plan and hash(stored) == hash(plan)
+        rng = np.random.default_rng(0)
+        factors = [jnp.asarray(rng.standard_normal((I, RANK))
+                               .astype(np.float32)) for I in at.dims]
+        views = plan_mod.build_views(at, plan)
+        plan_mod.execute_mttkrp(plan, at, views, factors, 0)
+        n = ops.cache_size()
+        # the deserialized plan is the same cache key: no new executable
+        plan_mod.execute_mttkrp(stored, at, views, factors, 0)
+        assert ops.cache_size() == n
+
+
+class TestSerializationProps:
+    @settings(max_examples=10, deadline=None)
+    @given(dim0=st.integers(4, 40), dim1=st.integers(3, 30),
+           dim2=st.integers(2, 20), nnz=st.integers(1, 300),
+           rank=st.sampled_from([1, 2, 4, 6, 12]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_roundtrip_preserves_plan(self, dim0, dim1, dim2, nnz, rank,
+                                      seed):
+        at = alto.build(synthetic.uniform_tensor((dim0, dim1, dim2), nnz,
+                                                 seed=seed % 1000),
+                        n_partitions=2)
+        plan = plan_mod.make_plan(at.meta, rank, backend="pallas",
+                                  interpret=True)
+        record = json.loads(json.dumps(autotune.serialize_plan(plan)))
+        back = autotune.deserialize_plan(record, at.meta, interpret=True)
+        assert back == plan and hash(back) == hash(plan)
+
+    @settings(max_examples=10, deadline=None)
+    @given(dims=st.shapes(min_dims=2, max_dims=4, min_side=2, max_side=50),
+           nnz=st.integers(1, 200), seed=st.integers(0, 999))
+    def test_fingerprint_tracks_meta_identity(self, dims, nnz, seed):
+        at = alto.build(synthetic.uniform_tensor(dims, nnz, seed=seed),
+                        n_partitions=2)
+        fp = autotune.meta_fingerprint(at.meta)
+        assert fp == autotune.meta_fingerprint(at.meta)
+        import dataclasses
+        other = dataclasses.replace(at.meta, nnz=at.meta.nnz + 1)
+        assert autotune.meta_fingerprint(other) != fp
+        base = autotune.plan_key(at.meta, 4, "pallas")
+        assert base != autotune.plan_key(other, 4, "pallas")
+        assert base != autotune.plan_key(at.meta, 4, "pallas", n_shards=2)
+        # objective and fast-memory budget change the measurement, so
+        # they must change the key (phi/mttkrp winners never collide,
+        # Π-policy inputs are pinned)
+        assert base != autotune.plan_key(at.meta, 4, "pallas",
+                                         objective="phi")
+        assert base != autotune.plan_key(at.meta, 4, "pallas",
+                                         fast_mem_bytes=1)
+
+
+class TestCandidateSpace:
+    def test_static_choice_is_first_and_survives_caps(self):
+        at = _tensor()
+        static = plan_mod.static_mode_plan(at.meta, 0, RANK)
+        for cap in (1, 2, 100):
+            cands = plan_mod.candidate_mode_plans(at.meta, 0, RANK,
+                                                  max_candidates=cap)
+            assert cands[0] == static
+            assert len(cands) <= cap
+
+    def test_candidates_respect_budget_and_divisors(self):
+        at = _tensor(dims=(64, 48, 32), nnz=2000)
+        budget = 256 * 1024
+        for mode in range(3):
+            cands = plan_mod.candidate_mode_plans(at.meta, mode, 12,
+                                                  vmem_limit=budget)
+            phi_binding = plan_mod.phi_constraint_active(at.meta, mode, 12,
+                                                         vmem_limit=budget)
+            for c in cands[1:]:      # static choice may overflow (advisory)
+                assert 12 % c.r_block == 0
+                assert c.vmem_bytes <= budget
+                if (phi_binding and c.traversal
+                        is heuristics.Traversal.OUTPUT_ORIENTED):
+                    assert c.phi_vmem_bytes <= budget
+
+    def test_forced_oriented_excludes_recursive(self):
+        at = _tensor()
+        cands = plan_mod.candidate_mode_plans(at.meta, 0, RANK,
+                                              force_oriented=True)
+        assert all(c.traversal is heuristics.Traversal.OUTPUT_ORIENTED
+                   for c in cands)

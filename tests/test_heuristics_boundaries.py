@@ -124,3 +124,131 @@ class TestPlanHonorsHeuristics:
                            params=cpapr.CpaprParams(k_max=1), plan=plan)
         assert res.traversals == list(plan.traversals())
         assert res.pi_policy == plan.pi_policy.value
+
+
+class TestPhiVmemFootprint:
+    """Exact byte accounting of the Φ-specific VMEM model — the
+    ROADMAP-flagged gap: the fused Φ kernel keeps the full-rank B
+    (I_mode × R) resident per grid step plus the gathered block B rows,
+    which the MTTKRP-shaped model never budgeted."""
+
+    def _meta(self, dims=(64, 48, 32), nnz=2000, L=4):
+        x = synthetic.uniform_tensor(dims, nnz, seed=0)
+        return alto.build(x, n_partitions=L).meta
+
+    def test_phi_oriented_exact_bytes_otf(self):
+        meta = self._meta()
+        mode, bm, R, db = 1, 64, 8, 4
+        W = meta.enc.n_words
+        want = (bm * W * 4                      # words tile
+                + bm * 4                        # rows tile (int32)
+                + bm * db                       # values tile
+                + bm * bm * db                  # segment one-hot
+                + meta.dims[mode] * R * db      # RESIDENT full-rank B
+                + bm * R * db                   # gathered B block rows
+                + 2 * bm * R * db               # krp + contrib
+                + bm * R * db                   # segment-sum output tile
+                + sum(I for m, I in enumerate(meta.dims)
+                      if m != mode) * R * db)   # resident other factors
+        got = plan_mod.phi_oriented_vmem_bytes(meta, mode, bm, R, db)
+        assert got == want
+
+    def test_phi_oriented_pre_streams_pi_instead_of_factors(self):
+        meta = self._meta()
+        mode, bm, R, db = 0, 128, 16, 4
+        otf = plan_mod.phi_oriented_vmem_bytes(meta, mode, bm, R, db,
+                                               pre_pi=False)
+        pre = plan_mod.phi_oriented_vmem_bytes(meta, mode, bm, R, db,
+                                               pre_pi=True)
+        others = sum(I for m, I in enumerate(meta.dims) if m != mode)
+        # PRE swaps the resident factors for a (block_m, R) Π tile
+        assert otf - pre == (others - bm) * R * db
+
+    def test_phi_recursive_exact_bytes_otf(self):
+        meta = self._meta(L=4)
+        mode, R, db = 2, 8, 4
+        L = meta.n_partitions
+        chunk = -(-max(meta.nnz, L) // L)
+        T = meta.temp_rows[mode]
+        W = meta.enc.n_words
+        want = (chunk * W * 4                   # words tile
+                + chunk * db                    # values tile
+                + chunk * T * db                # Temp one-hot
+                + meta.dims[mode] * R * db      # RESIDENT full-rank B
+                + chunk * R * db                # gathered B rows
+                + 2 * chunk * R * db            # krp + contrib
+                + T * R * db                    # partition Temp output
+                + sum(I for m, I in enumerate(meta.dims)
+                      if m != mode) * R * db)   # resident other factors
+        got = plan_mod.phi_recursive_vmem_bytes(meta, mode, R, db)
+        assert got == want
+
+    def test_resident_b_scales_with_mode_dim_not_block(self):
+        """The gap term: growing I_mode must grow the Φ footprint even
+        with every blocking knob frozen (B is resident whole)."""
+        small = self._meta(dims=(64, 48, 32))
+        big = self._meta(dims=(4096, 48, 32))
+        R, bm = 16, 64
+        delta = (plan_mod.phi_oriented_vmem_bytes(big, 0, bm, R)
+                 - plan_mod.phi_oriented_vmem_bytes(small, 0, bm, R))
+        assert delta >= (4096 - 64) * R * 4     # at least the B rows
+
+    def test_phi_footprint_constrains_plan_block_m(self):
+        """On a big mode with a tight budget the Φ-aware choice must pick
+        a smaller block than the MTTKRP-only model would."""
+        meta = self._meta(dims=(2048, 16, 12), nnz=3000)
+        R = 16
+        budget = plan_mod.phi_oriented_vmem_bytes(
+            meta, 0, plan_mod.MAX_BLOCK_M, R) - 1
+        assert plan_mod.phi_constraint_active(meta, 0, R,
+                                              vmem_limit=budget)
+        rb = plan_mod.choose_rank_block_oriented(meta, 0, R,
+                                                 vmem_limit=budget)
+        mttkrp_only = plan_mod.choose_block_m(meta, 0, rb,
+                                              vmem_limit=budget)
+        phi_aware = plan_mod.choose_block_m(meta, 0, rb, vmem_limit=budget,
+                                            rank=R)
+        assert phi_aware < mttkrp_only
+        assert plan_mod.phi_oriented_vmem_bytes(meta, 0, phi_aware, R) \
+            <= budget
+
+    def test_unsatisfiable_phi_budget_does_not_throttle_mttkrp(self):
+        """When the resident-B term alone overflows the budget at every
+        block size, Φ spills regardless — the vacuous constraint must
+        not drag the MTTKRP kernel's block down to the minimum."""
+        meta = self._meta(dims=(4096, 24, 16), nnz=3000)
+        R = 64
+        # budget below Φ's floor but roomy for MTTKRP tiles
+        budget = plan_mod.phi_oriented_vmem_bytes(
+            meta, 0, plan_mod.MIN_BLOCK_M, R) - 1
+        assert not plan_mod.phi_constraint_active(meta, 0, R,
+                                                  vmem_limit=budget)
+        rb = plan_mod.choose_rank_block_oriented(meta, 0, R,
+                                                 vmem_limit=budget)
+        mttkrp_only = plan_mod.choose_block_m(meta, 0, rb,
+                                              vmem_limit=budget)
+        phi_aware = plan_mod.choose_block_m(meta, 0, rb, vmem_limit=budget,
+                                            rank=R)
+        assert phi_aware == mttkrp_only > plan_mod.MIN_BLOCK_M
+        # and the candidate space keeps those larger blocks visible
+        # (at the same rank tile; smaller tiles may go larger still)
+        cands = plan_mod.candidate_mode_plans(meta, 0, R,
+                                              vmem_limit=budget)
+        same_rb = [c for c in cands
+                   if c.traversal is heuristics.Traversal.OUTPUT_ORIENTED
+                   and c.r_block == rb]
+        assert max(c.block_m for c in same_rb) == mttkrp_only
+
+    def test_mode_plan_records_phi_footprint(self):
+        meta = self._meta()
+        plan = plan_mod.make_plan(meta, 8)
+        from repro.core.heuristics import Traversal
+        pre = plan.pi_policy is heuristics.PiPolicy.PRE
+        for mp in plan.modes:
+            if mp.traversal is Traversal.OUTPUT_ORIENTED:
+                want = plan_mod.phi_oriented_vmem_bytes(
+                    meta, mp.mode, mp.block_m, plan.rank, pre_pi=pre)
+            else:
+                want = plan_mod.phi_recursive_vmem_bytes(
+                    meta, mp.mode, plan.rank, pre_pi=pre)
+            assert mp.phi_vmem_bytes == want > 0
