@@ -1,0 +1,100 @@
+"""Scratch-carry vs one-hot oriented MTTKRP (ISSUE 4, ROADMAP kernel item).
+
+Emits ``mttkrp_carry/<tensor>/mode<m>/{onehot,carry}`` rows. The derived
+column carries the two quantities the carry rewrite is about:
+
+* ``nnz_per_s`` — stream throughput of the timed call;
+* ``partials_bytes`` — the materialized intermediate between kernel and
+  final ``(I_n, R)`` rows: the one-hot path round-trips a
+  ``(n_blocks, block_m, R)`` partials buffer through HBM for
+  `ops.segment_merge` to re-scatter, the carry path materializes only
+  the output itself (``I_n·R``; the reduction rides VMEM scratch).
+
+On CPU the kernels run under the Pallas interpreter, so times are a
+proxy ranking (docs/known-issues.md); the partials-bytes column is exact
+on any backend. R = 32: at small ranks the one-hot matmul is cheap
+enough that the merge pass can win under the interpreter; the carry path
+is expected to be no worse from R >= 32 up.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, plan_comparison_tensors, time_call
+from repro.core import alto, heuristics, plan as plan_mod
+from repro.core.heuristics import Traversal
+from repro.kernels import ops
+
+RANK = 32
+
+
+def _factors(dims, R, seed=0):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal((I, R)).astype(np.float32))
+            for I in dims]
+
+
+def partials_bytes(traversal: Traversal, stream_len: int, block_m: int,
+                   out_rows: int, rank: int, dtype_bytes: int = 4) -> int:
+    """Materialized-intermediate bytes between kernel and final rows."""
+    if traversal is Traversal.ORIENTED_CARRY:
+        return out_rows * rank * dtype_bytes           # the output itself
+    padded = -(-stream_len // block_m) * block_m       # n_blocks * block_m
+    return padded * rank * dtype_bytes
+
+
+def run(quick: bool = False):
+    tensors = plan_comparison_tensors()
+    names = list(tensors)[:1] if quick else list(tensors)
+    for name in names:
+        gen, kw = tensors[name]
+        x = gen(seed=0, **kw)
+        at = alto.build(x, n_partitions=8)
+        factors = _factors(x.dims, RANK)
+        modes = range(1 if quick else x.ndim)
+        for m in modes:
+            view = alto.oriented_view(at, m)
+            mp = plan_mod.static_mode_plan(at.meta, m, RANK,
+                                           force_oriented=True)
+            bm, rb = mp.block_m, mp.r_block
+            stream = int(view.rows.shape[0])
+
+            def onehot(view, factors):
+                return ops.mttkrp_oriented(view, factors, block_m=bm,
+                                           r_block=rb, interpret=None)
+
+            def carry(view, factors):
+                return ops.mttkrp_oriented_carry(view, factors, block_m=bm,
+                                                 r_block=rb, interpret=None)
+
+            t_one = time_call(onehot, view, factors)
+            t_car = time_call(carry, view, factors)
+            pb_one = partials_bytes(Traversal.OUTPUT_ORIENTED, stream, bm,
+                                    x.dims[m], RANK)
+            pb_car = partials_bytes(Traversal.ORIENTED_CARRY, stream, bm,
+                                    x.dims[m], RANK)
+            nnz_s_one = at.meta.nnz / (t_one * 1e-6)
+            nnz_s_car = at.meta.nnz / (t_car * 1e-6)
+            emit(f"mttkrp_carry/{name}/mode{m}/onehot", t_one,
+                 f"nnz_per_s={nnz_s_one:.3e};partials_bytes={pb_one};"
+                 f"block_m={bm};r_block={rb}")
+            emit(f"mttkrp_carry/{name}/mode{m}/carry", t_car,
+                 f"nnz_per_s={nnz_s_car:.3e};partials_bytes={pb_car};"
+                 f"speedup_vs_onehot={t_one / t_car:.2f};"
+                 f"partials_shrink={pb_one / max(1, pb_car):.1f}x")
+            # On a hyper-sparse long mode (I_n > padded stream) the carry
+            # output legitimately exceeds the one-hot partials — that is
+            # exactly when the traffic heuristic routes one-hot, so the
+            # claim under test is conditional on the routing decision.
+            if heuristics.choose_oriented_variant(at.meta, m, RANK) \
+                    is Traversal.ORIENTED_CARRY:
+                assert pb_car <= pb_one, (
+                    "carry chosen by the traffic model but materializes "
+                    "more than the one-hot partials — model and bench "
+                    "accounting disagree")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

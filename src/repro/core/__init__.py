@@ -5,6 +5,7 @@ from repro.core.alto import (AltoTensor, AltoMeta, OrientedView, build,
                              oriented_view, linearize, delinearize,
                              to_sparse)
 from repro.core import autotune, heuristics, mttkrp, plan, cpals, cpapr
+from repro.core.heuristics import Traversal
 from repro.core.plan import ExecutionPlan, ModePlan, make_plan
 from repro.core.autotune import tune_plan
 
@@ -12,5 +13,6 @@ __all__ = [
     "AltoEncoding", "make_encoding", "AltoTensor", "AltoMeta",
     "OrientedView", "build", "oriented_view", "linearize", "delinearize",
     "to_sparse", "autotune", "heuristics", "mttkrp", "plan", "cpals",
-    "cpapr", "ExecutionPlan", "ModePlan", "make_plan", "tune_plan",
+    "cpapr", "Traversal", "ExecutionPlan", "ModePlan", "make_plan",
+    "tune_plan",
 ]

@@ -54,7 +54,10 @@ from repro.core import mttkrp as core_mttkrp
 from repro.core import plan as plan_mod
 from repro.core.alto import AltoMeta, AltoTensor, delinearize, oriented_view
 
-PLAN_STORE_VERSION = 1
+# v2: the ORIENTED_CARRY traversal joined the candidate space. Bumping the
+# store version makes every pre-carry store load as empty (stale winners,
+# measured without the carry candidates, must not mask the new traversal).
+PLAN_STORE_VERSION = 2
 PLAN_CACHE_ENV = "REPRO_PLAN_CACHE"
 DEFAULT_STORE = "~/.cache/repro/plans.json"
 
@@ -380,9 +383,13 @@ def tune_plan(at: AltoTensor, rank: int, *, backend: str | None = None,
             force_oriented=mesh is not None, pre_pi=pre_pi,
             max_candidates=max_candidates)
         if backend == "reference":
-            # The pure-jnp traversals have no tiling knobs: one candidate
-            # per traversal, everything else times identically.
-            dedupe_key = lambda c: (c.traversal,)                # noqa: E731
+            # The pure-jnp traversals have no tiling knobs, and both
+            # oriented variants run the same sorted segment_sum: one
+            # candidate per traversal *family*, everything else times
+            # identically.
+            dedupe_key = lambda c: (                             # noqa: E731
+                "oriented" if heuristics.is_oriented(c.traversal)
+                else c.traversal,)
         elif objective == "phi":
             # The fused Φ kernel has no rank tiling: candidates that
             # differ only in r_block time identically, keep the first
@@ -399,8 +406,7 @@ def tune_plan(at: AltoTensor, rank: int, *, backend: str | None = None,
                     deduped.append(c)
             cands = tuple(deduped)
         needs_view = (mesh is not None) or any(
-            c.traversal is heuristics.Traversal.OUTPUT_ORIENTED
-            for c in cands)
+            heuristics.is_oriented(c.traversal) for c in cands)
         view = oriented_view(at, n) if needs_view else None
         views = {n: view} if view is not None else {}
         if objective == "phi":
@@ -419,8 +425,8 @@ def tune_plan(at: AltoTensor, rank: int, *, backend: str | None = None,
             cand_plan = _candidate_plan(meta, rank, backend, interpret,
                                         pi_policy, n, mp, base_modes, mesh)
             if objective == "phi":
-                oriented = (view is not None and mp.traversal
-                            is heuristics.Traversal.OUTPUT_ORIENTED)
+                oriented = (view is not None
+                            and heuristics.is_oriented(mp.traversal))
                 pi = (pi_view if oriented else pi_alto) if pre_pi else None
                 t = _time_phi(cand_plan, at, view, B, factors, pi, n,
                               warmup, iters)

@@ -93,8 +93,8 @@ def _mode_update(at: AltoTensor, view: OrientedView | None, mode: int,
         # Line 6 (Π, M×R rows) in the element order the plan's traversal
         # will consume (oriented modes read the view-permuted stream).
         oriented = (view is not None
-                    and plan.modes[mode].traversal
-                    is heuristics.Traversal.OUTPUT_ORIENTED)
+                    and heuristics.is_oriented(
+                        plan.modes[mode].traversal))
         words = view.words if oriented else at.words
         coords = delinearize(at.meta.enc, words)
         pi = krp_rows(coords, factors, mode)
@@ -174,8 +174,9 @@ def cp_apr(at: AltoTensor, rank: int, params: CpaprParams | None = None,
 
     if views is None:
         views = plan_mod.build_views(at, plan)
-    traversals = ["oriented" if (n in views and plan.modes[n].traversal
-                                 is heuristics.Traversal.OUTPUT_ORIENTED)
+    traversals = [plan.modes[n].traversal.value
+                  if (n in views
+                      and heuristics.is_oriented(plan.modes[n].traversal))
                   else "recursive" for n in range(N)]
 
     update = jax.jit(_mode_update,

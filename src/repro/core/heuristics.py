@@ -28,6 +28,22 @@ DEFAULT_FAST_MEM_BYTES = 128 * 1024 * 1024
 class Traversal(enum.Enum):
     RECURSIVE = "recursive"          # ALTO order + Temp + pull reduction
     OUTPUT_ORIENTED = "oriented"     # output-mode order + segment reduction
+    # output-mode order + sequential scratch-carry scan: partial sums ride
+    # a VMEM carry across grid steps and land directly in the (I_n, R)
+    # output — no (n_blocks, block_m, R) partials buffer, no host merge.
+    ORIENTED_CARRY = "oriented_carry"
+
+
+# Both output-oriented variants consume the same row-sorted view and obey
+# the same carry-merge correctness condition; routing code that only cares
+# about "recursive vs oriented" should test membership here, not identity
+# with OUTPUT_ORIENTED.
+ORIENTED_FAMILY = (Traversal.OUTPUT_ORIENTED, Traversal.ORIENTED_CARRY)
+
+
+def is_oriented(traversal: Traversal) -> bool:
+    """True for either output-oriented variant (one-hot merge or carry)."""
+    return traversal in ORIENTED_FAMILY
 
 
 class PiPolicy(enum.Enum):
@@ -61,17 +77,83 @@ def choose_traversal(meta: AltoMeta, mode: int) -> Traversal:
 
 
 def candidate_traversals(meta: AltoMeta, mode: int) -> tuple[Traversal, ...]:
-    """Both traversals, static choice first.
+    """All traversals, static family choice first.
 
     The measured autotuner (`core.autotune`) re-ranks this candidate list
     by timing; the static heuristic survives as the *prior* — it orders
     the candidates (so a capped search keeps the analytic choice) and
-    remains the answer whenever no measurement is available.
+    remains the answer whenever no measurement is available. Both
+    output-oriented variants are listed — the carry variant's VMEM
+    feasibility is the plan layer's call (`plan.candidate_mode_plans`
+    prunes by the per-kernel footprints).
     """
     first = choose_traversal(meta, mode)
-    second = (Traversal.OUTPUT_ORIENTED if first is Traversal.RECURSIVE
-              else Traversal.RECURSIVE)
-    return (first, second)
+    rest = tuple(t for t in (Traversal.OUTPUT_ORIENTED,
+                             Traversal.ORIENTED_CARRY, Traversal.RECURSIVE)
+                 if t is not first)
+    return (first,) + rest
+
+
+# ---------------------------------------------------------------------------
+# Oriented-variant choice: one-hot merge vs scratch-carry, by HBM traffic
+# ---------------------------------------------------------------------------
+
+def stream_len(meta: AltoMeta) -> int:
+    """Length of the (partition-padded) sorted nonzero stream the oriented
+    kernels consume. The further padding to a ``block_m`` multiple is at
+    most one block and is ignored by the traffic model."""
+    L = meta.n_partitions
+    return -(-max(meta.nnz, L) // L) * L
+
+
+def oriented_merge_traffic_bytes(meta: AltoMeta, mode: int, rank: int,
+                                 dtype_bytes: int = 4) -> int:
+    """HBM bytes the one-hot oriented path moves BEYOND the stream read.
+
+    The kernel materializes ``(n_blocks, block_m, R)`` per-block segment
+    sums to HBM (one write), which `ops.segment_merge` immediately reads
+    back together with the row stream and scatters into the ``(I_n, R)``
+    output (one read + the output write). For typical tensors the
+    partials round-trip dwarfs everything else — it is the term the
+    scratch-carry traversal deletes.
+    """
+    M = stream_len(meta)
+    partials_round_trip = 2 * M * rank * dtype_bytes   # write, then re-read
+    merge_rows = M * 4                                 # merge re-reads rows
+    out_write = meta.dims[mode] * rank * dtype_bytes
+    return partials_round_trip + merge_rows + out_write
+
+
+def carry_traffic_bytes(meta: AltoMeta, mode: int, rank: int,
+                        dtype_bytes: int = 4) -> int:
+    """HBM bytes the scratch-carry path moves BEYOND the stream read.
+
+    The ``(I_n, r_block)`` output tile stays VMEM-resident across the
+    sequential grid (loaded once from the aliased zero buffer, stored
+    once), so the only materialized intermediate is the output itself:
+    ``I_n·R`` read + ``I_n·R`` write, independent of nnz.
+    """
+    return 2 * meta.dims[mode] * rank * dtype_bytes
+
+
+def choose_oriented_variant(meta: AltoMeta, mode: int, rank: int,
+                            dtype_bytes: int = 4,
+                            carry_feasible: bool = True) -> Traversal:
+    """Pick between the output-oriented variants by modelled HBM traffic.
+
+    The carry traversal wins whenever its resident-output traffic is
+    below the one-hot path's partials round-trip — i.e. unless the mode
+    dimension dwarfs the nonzero stream (hyper-sparse long modes, where
+    keeping ``(I_n, r_block)`` resident costs more than it saves) — and
+    only while its VMEM footprint is satisfiable at all
+    (``carry_feasible``, the plan layer's `plan.carry_fits_vmem`).
+    """
+    if not carry_feasible:
+        return Traversal.OUTPUT_ORIENTED
+    if (carry_traffic_bytes(meta, mode, rank, dtype_bytes)
+            < oriented_merge_traffic_bytes(meta, mode, rank, dtype_bytes)):
+        return Traversal.ORIENTED_CARRY
+    return Traversal.OUTPUT_ORIENTED
 
 
 def choose_pi_policy(meta: AltoMeta, rank: int, value_bytes: int = 4,

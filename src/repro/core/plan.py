@@ -15,7 +15,10 @@ description of exactly which compiled kernel variant runs for every
 The plan answers four questions the call sites used to guess at:
 
   * **traversal** per mode — `heuristics.choose_traversal` (fiber reuse vs
-    the 4-memory-op buffered accumulation cost, §4.2);
+    the 4-memory-op buffered accumulation cost, §4.2), then for
+    output-oriented modes the one-hot-merge vs scratch-carry refinement
+    (`heuristics.choose_oriented_variant`: modelled HBM traffic, gated on
+    the carry kernel's resident-output VMEM feasibility);
   * **rank blocking** (`r_block`) and **nonzero blocking** (`block_m`) —
     chosen so the Pallas kernel's per-grid-step VMEM footprint fits the
     accelerator budget, from `AltoMeta` (temp_rows, dims, dtype) instead of
@@ -28,7 +31,8 @@ The plan answers four questions the call sites used to guess at:
     nonzero stream is cut into per-device contiguous shards, each device
     runs the single-device segment reduction locally, and boundary-run
     carries plus the final rows are combined by ``psum``. Mesh-bearing
-    plans force the output-oriented traversal for every mode (row-range
+    plans force the output-oriented family for every mode (either
+    variant — one-hot merge or shard-local scratch carry; row-range
     partitioning needs the row-sorted stream; the recursive traversal's
     partition intervals overlap arbitrarily across devices) and divide the
     VMEM budget by the shard count — shard-local blocks are sized as if
@@ -171,6 +175,28 @@ def oriented_vmem_bytes(meta: AltoMeta, mode: int, block_m: int,
     return words + rows + values + onehot + contrib + factors
 
 
+def oriented_carry_vmem_bytes(meta: AltoMeta, mode: int, block_m: int,
+                              r_block: int, dtype_bytes: int = 4) -> int:
+    """Per-grid-step VMEM of the scratch-carry oriented kernel.
+
+    No (block_m, block_m) one-hot — in-block segment sums are a VPU
+    scatter — but the ``(I_mode, r_block)`` output tile stays resident
+    across the whole sequential scan, plus the (1, r_block) carry
+    scratch. Stream tiles, krp/contrib/segment-sum intermediates, and
+    the resident factor tiles as in the one-hot kernel.
+    """
+    W = meta.enc.n_words
+    words = block_m * W * 4
+    rows = block_m * 4
+    values = block_m * dtype_bytes
+    contrib = 3 * block_m * r_block * dtype_bytes   # krp + contrib + seg sums
+    out_resident = meta.dims[mode] * r_block * dtype_bytes
+    carry = r_block * dtype_bytes
+    factors = sum(I for m, I in enumerate(meta.dims)
+                  if m != mode) * r_block * dtype_bytes
+    return words + rows + values + contrib + out_resident + carry + factors
+
+
 def phi_oriented_vmem_bytes(meta: AltoMeta, mode: int, block_m: int,
                             rank: int, dtype_bytes: int = 4,
                             pre_pi: bool = False) -> int:
@@ -208,6 +234,36 @@ def phi_oriented_vmem_bytes(meta: AltoMeta, mode: int, block_m: int,
                        if m != mode) * rank * dtype_bytes
     return (words + rows + values + onehot + b_resident + b_rows
             + krp_contrib + out + operands)
+
+
+def phi_oriented_carry_vmem_bytes(meta: AltoMeta, mode: int, block_m: int,
+                                  rank: int, dtype_bytes: int = 4,
+                                  pre_pi: bool = False) -> int:
+    """Per-grid-step VMEM of the *scratch-carry fused Φ* kernel.
+
+    Same full-rank accounting as :func:`phi_oriented_vmem_bytes` with the
+    (block_m, block_m) one-hot replaced by the carry pattern's resident
+    terms: the whole ``(I_mode, R)`` output block (written in place every
+    step) next to the already-resident ``(I_mode, R)`` B operand, one more
+    (block_m, R) segment-sum intermediate, and the (1, R) carry scratch.
+    """
+    W = meta.enc.n_words
+    words = block_m * W * 4
+    rows = block_m * 4
+    values = block_m * dtype_bytes
+    b_resident = meta.dims[mode] * rank * dtype_bytes
+    b_rows = block_m * rank * dtype_bytes
+    krp_contrib = 2 * block_m * rank * dtype_bytes
+    seg_sums = block_m * rank * dtype_bytes
+    out_resident = meta.dims[mode] * rank * dtype_bytes
+    carry = rank * dtype_bytes
+    if pre_pi:
+        operands = block_m * rank * dtype_bytes
+    else:
+        operands = sum(I for m, I in enumerate(meta.dims)
+                       if m != mode) * rank * dtype_bytes
+    return (words + rows + values + b_resident + b_rows + krp_contrib
+            + seg_sums + out_resident + carry + operands)
 
 
 def phi_recursive_vmem_bytes(meta: AltoMeta, mode: int, rank: int,
@@ -280,36 +336,90 @@ def choose_rank_block_oriented(meta: AltoMeta, mode: int, rank: int,
     return 1
 
 
+def choose_rank_block_carry(meta: AltoMeta, mode: int, rank: int,
+                            dtype_bytes: int = 4,
+                            vmem_limit: int = VMEM_BYTES) -> int:
+    """Largest divisor of ``rank`` whose *carry* footprint fits VMEM.
+
+    The carry kernel's resident ``(I_mode, r_block)`` output tile makes
+    the rank tile the lever that actually bounds its footprint, so the
+    tile is sized at the minimum nonzero block like the oriented sibling.
+    """
+    for rb in _divisors_desc(rank):
+        if oriented_carry_vmem_bytes(meta, mode, MIN_BLOCK_M, rb,
+                                     dtype_bytes) <= vmem_limit:
+            return rb
+    return 1
+
+
+def carry_fits_vmem(meta: AltoMeta, mode: int, rank: int,
+                    dtype_bytes: int = 4,
+                    vmem_limit: int = VMEM_BYTES) -> bool:
+    """True iff the scratch-carry kernel is feasible for this mode at all
+    (smallest tiling: ``r_block=1``, ``MIN_BLOCK_M``).
+
+    Unlike the other budgets this one is a hard *routing* gate, not
+    advisory: the carry kernel's whole advantage is the VMEM-resident
+    output tile, so when ``I_mode`` alone overflows the budget the
+    traversal should route to the one-hot merge path instead of
+    spilling — `heuristics.choose_oriented_variant` consumes this.
+    """
+    return oriented_carry_vmem_bytes(meta, mode, MIN_BLOCK_M, 1,
+                                     dtype_bytes) <= vmem_limit
+
+
+def _mttkrp_vmem_model(traversal: heuristics.Traversal):
+    """The MTTKRP footprint function the traversal actually runs."""
+    if traversal is heuristics.Traversal.ORIENTED_CARRY:
+        return oriented_carry_vmem_bytes
+    return oriented_vmem_bytes
+
+
+def _phi_vmem_model(traversal: heuristics.Traversal):
+    """The fused-Φ footprint function the traversal actually runs."""
+    if traversal is heuristics.Traversal.ORIENTED_CARRY:
+        return phi_oriented_carry_vmem_bytes
+    return phi_oriented_vmem_bytes
+
+
 def choose_block_m(meta: AltoMeta, mode: int, r_block: int,
                    dtype_bytes: int = 4,
                    vmem_limit: int = VMEM_BYTES,
                    rank: int | None = None,
-                   pre_pi: bool = False) -> int:
+                   pre_pi: bool = False,
+                   traversal: heuristics.Traversal =
+                   heuristics.Traversal.OUTPUT_ORIENTED) -> int:
     """Largest power-of-two nonzero block for the oriented kernels.
 
     The oriented stream is padded to a multiple of block_m by `ops`, so the
-    choice is free of divisibility constraints on nnz.  When ``rank`` is
-    given the block must also fit the *fused Φ* kernel's footprint
-    (:func:`phi_oriented_vmem_bytes` — full rank, resident B): the same
-    ``ModePlan.block_m`` feeds both the MTTKRP and the Φ kernel, so the
-    block is sized for whichever is hungrier.  The Φ constraint only
-    applies while it is *satisfiable* (fits at ``MIN_BLOCK_M``): on a
-    huge mode the resident ``I_mode·R`` B term alone can exceed any
-    budget, and shrinking the block cannot fix that — Φ spills
-    regardless, so the unsatisfiable constraint must not drag the
-    MTTKRP kernel (which never keeps B resident) down to the minimum
-    block.  If even ``MIN_BLOCK_M`` overflows the budget is advisory
-    and ``MIN_BLOCK_M`` is returned (the kernel still compiles, just
-    spills — same contract as `choose_rank_block`).
+    choice is free of divisibility constraints on nnz.  ``traversal``
+    selects the footprint model being sized (one-hot merge vs scratch
+    carry — the carry kernel swaps the (block_m, block_m) one-hot for a
+    resident output tile).  When ``rank`` is given the block must also
+    fit the *fused Φ* kernel's footprint for the same traversal
+    (:func:`phi_oriented_vmem_bytes` / :func:`phi_oriented_carry_vmem_bytes`
+    — full rank, resident B): the same ``ModePlan.block_m`` feeds both
+    the MTTKRP and the Φ kernel, so the block is sized for whichever is
+    hungrier.  The Φ constraint only applies while it is *satisfiable*
+    (fits at ``MIN_BLOCK_M``): on a huge mode the resident ``I_mode·R``
+    B term alone can exceed any budget, and shrinking the block cannot
+    fix that — Φ spills regardless, so the unsatisfiable constraint must
+    not drag the MTTKRP kernel down to the minimum block.  If even
+    ``MIN_BLOCK_M`` overflows the budget is advisory and ``MIN_BLOCK_M``
+    is returned (the kernel still compiles, just spills — same contract
+    as `choose_rank_block`).
     """
+    mttkrp_model = _mttkrp_vmem_model(traversal)
+    phi_model = _phi_vmem_model(traversal)
     phi_binding = rank is not None and phi_constraint_active(
-        meta, mode, rank, dtype_bytes, vmem_limit, pre_pi=pre_pi)
+        meta, mode, rank, dtype_bytes, vmem_limit, pre_pi=pre_pi,
+        traversal=traversal)
 
     def fits(bm: int) -> bool:
-        if oriented_vmem_bytes(meta, mode, bm, r_block,
-                               dtype_bytes) > vmem_limit:
+        if mttkrp_model(meta, mode, bm, r_block,
+                        dtype_bytes) > vmem_limit:
             return False
-        if phi_binding and phi_oriented_vmem_bytes(
+        if phi_binding and phi_model(
                 meta, mode, bm, rank, dtype_bytes,
                 pre_pi=pre_pi) > vmem_limit:
             return False
@@ -324,14 +434,16 @@ def choose_block_m(meta: AltoMeta, mode: int, r_block: int,
 def phi_constraint_active(meta: AltoMeta, mode: int, rank: int,
                           dtype_bytes: int = 4,
                           vmem_limit: int = VMEM_BYTES,
-                          pre_pi: bool = False) -> bool:
+                          pre_pi: bool = False,
+                          traversal: heuristics.Traversal =
+                          heuristics.Traversal.OUTPUT_ORIENTED) -> bool:
     """True iff the fused-Φ footprint can fit the budget at all for this
     mode (at ``MIN_BLOCK_M``) — i.e. the Φ constraint is binding rather
     than vacuous.  An unsatisfiable Φ budget is advisory (the kernel
     spills at any block size) and must not throttle the MTTKRP tiling."""
-    return phi_oriented_vmem_bytes(meta, mode, MIN_BLOCK_M, rank,
-                                   dtype_bytes,
-                                   pre_pi=pre_pi) <= vmem_limit
+    return _phi_vmem_model(traversal)(meta, mode, MIN_BLOCK_M, rank,
+                                      dtype_bytes,
+                                      pre_pi=pre_pi) <= vmem_limit
 
 
 # ---------------------------------------------------------------------------
@@ -348,15 +460,15 @@ def _mode_plan(meta: AltoMeta, mode: int, rank: int,
                traversal: heuristics.Traversal, r_block: int, block_m: int,
                dtype_bytes: int, pre_pi: bool) -> ModePlan:
     """Assemble a ModePlan with both kernel footprints filled in."""
-    vm = (recursive_vmem_bytes(meta, mode, r_block, dtype_bytes)
-          if traversal is heuristics.Traversal.RECURSIVE
-          else oriented_vmem_bytes(meta, mode, block_m, r_block,
-                                   dtype_bytes))
-    phi_vm = (phi_recursive_vmem_bytes(meta, mode, rank, dtype_bytes,
-                                       pre_pi=pre_pi)
-              if traversal is heuristics.Traversal.RECURSIVE
-              else phi_oriented_vmem_bytes(meta, mode, block_m, rank,
-                                           dtype_bytes, pre_pi=pre_pi))
+    if traversal is heuristics.Traversal.RECURSIVE:
+        vm = recursive_vmem_bytes(meta, mode, r_block, dtype_bytes)
+        phi_vm = phi_recursive_vmem_bytes(meta, mode, rank, dtype_bytes,
+                                          pre_pi=pre_pi)
+    else:
+        vm = _mttkrp_vmem_model(traversal)(meta, mode, block_m, r_block,
+                                           dtype_bytes)
+        phi_vm = _phi_vmem_model(traversal)(meta, mode, block_m, rank,
+                                            dtype_bytes, pre_pi=pre_pi)
     return ModePlan(mode=mode, traversal=traversal, r_block=r_block,
                     block_m=block_m, temp_rows=meta.temp_rows[mode],
                     vmem_bytes=vm, phi_vmem_bytes=phi_vm)
@@ -366,19 +478,35 @@ def static_mode_plan(meta: AltoMeta, mode: int, rank: int, *,
                      dtype_bytes: int = 4, vmem_limit: int = VMEM_BYTES,
                      force_oriented: bool = False,
                      pre_pi: bool = False) -> ModePlan:
-    """The analytic-model choice for one mode (the pre-autotune answer)."""
+    """The analytic-model choice for one mode (the pre-autotune answer).
+
+    The traversal resolves in two stages: the paper's fiber-reuse rule
+    picks recursive vs output-oriented (`heuristics.choose_traversal`),
+    then an output-oriented mode refines to the one-hot merge or the
+    scratch-carry variant by modelled HBM traffic
+    (`heuristics.choose_oriented_variant`), gated on the carry kernel's
+    resident-output VMEM feasibility (:func:`carry_fits_vmem`).
+    """
     traversal = (heuristics.Traversal.OUTPUT_ORIENTED if force_oriented
                  else heuristics.choose_traversal(meta, mode))
+    if heuristics.is_oriented(traversal):
+        traversal = heuristics.choose_oriented_variant(
+            meta, mode, rank, dtype_bytes,
+            carry_feasible=carry_fits_vmem(meta, mode, rank, dtype_bytes,
+                                           vmem_limit))
     # Budget the rank tile against the kernel that will actually run:
     # the recursive Temp model would throttle oriented modes (huge
     # partition intervals, or any mesh plan) for no VMEM benefit.
     if traversal is heuristics.Traversal.RECURSIVE:
         rb = choose_rank_block(meta, mode, rank, dtype_bytes, vmem_limit)
+    elif traversal is heuristics.Traversal.ORIENTED_CARRY:
+        rb = choose_rank_block_carry(meta, mode, rank, dtype_bytes,
+                                     vmem_limit)
     else:
         rb = choose_rank_block_oriented(meta, mode, rank, dtype_bytes,
                                         vmem_limit)
     bm = choose_block_m(meta, mode, rb, dtype_bytes, vmem_limit,
-                        rank=rank, pre_pi=pre_pi)
+                        rank=rank, pre_pi=pre_pi, traversal=traversal)
     return _mode_plan(meta, mode, rank, traversal, rb, bm, dtype_bytes,
                       pre_pi)
 
@@ -418,7 +546,8 @@ def candidate_mode_plans(meta: AltoMeta, mode: int, rank: int, *,
         out.append(_mode_plan(meta, mode, rank, traversal, rb, bm,
                               dtype_bytes, pre_pi))
 
-    traversals = ((heuristics.Traversal.OUTPUT_ORIENTED,) if force_oriented
+    traversals = ((heuristics.Traversal.OUTPUT_ORIENTED,
+                   heuristics.Traversal.ORIENTED_CARRY) if force_oriented
                   else heuristics.candidate_traversals(meta, mode))
     for traversal in traversals:
         if traversal is heuristics.Traversal.RECURSIVE:
@@ -429,22 +558,29 @@ def candidate_mode_plans(meta: AltoMeta, mode: int, rank: int, *,
                                         dtype_bytes) <= vmem_limit:
                     add(traversal, rb, static.block_m)
         else:
+            if (traversal is heuristics.Traversal.ORIENTED_CARRY
+                    and not carry_fits_vmem(meta, mode, rank, dtype_bytes,
+                                            vmem_limit)):
+                continue    # hard gate: resident output cannot fit at all
+            mttkrp_model = _mttkrp_vmem_model(traversal)
+            phi_model = _phi_vmem_model(traversal)
             # Same binding-vs-vacuous rule as choose_block_m: an
             # unsatisfiable Φ budget must not hide the larger MTTKRP
             # blocks from the tuner.
             phi_binding = phi_constraint_active(meta, mode, rank,
                                                 dtype_bytes, vmem_limit,
-                                                pre_pi=pre_pi)
+                                                pre_pi=pre_pi,
+                                                traversal=traversal)
             for rb in _divisors_desc(rank):
-                if oriented_vmem_bytes(meta, mode, MIN_BLOCK_M, rb,
-                                       dtype_bytes) > vmem_limit:
+                if mttkrp_model(meta, mode, MIN_BLOCK_M, rb,
+                                dtype_bytes) > vmem_limit:
                     continue
                 bm = MAX_BLOCK_M
                 while bm >= MIN_BLOCK_M:
-                    if (oriented_vmem_bytes(meta, mode, bm, rb,
-                                            dtype_bytes) <= vmem_limit
+                    if (mttkrp_model(meta, mode, bm, rb,
+                                     dtype_bytes) <= vmem_limit
                             and not (phi_binding and
-                                     phi_oriented_vmem_bytes(
+                                     phi_model(
                                          meta, mode, bm, rank,
                                          dtype_bytes,
                                          pre_pi=pre_pi) > vmem_limit)):
@@ -467,9 +603,11 @@ def make_plan(meta: AltoMeta, rank: int, *, backend: str | None = None,
     """Resolve heuristics + static meta into a concrete execution plan.
 
     With ``mesh=`` the plan becomes mesh-bearing: every mode is forced to
-    the output-oriented traversal (the sharded merge partitions the
+    the output-oriented family (the sharded merge partitions the
     row-sorted stream into per-device row ranges; the recursive
-    traversal's partition intervals overlap arbitrarily across devices)
+    traversal's partition intervals overlap arbitrarily across devices —
+    the one-hot-vs-carry refinement still applies per mode, and carry
+    shards run the scratch-carry kernel locally under ``shard_map``)
     and the VMEM budget is divided by the shard count (see module
     docstring), so the shard-local Pallas tiles are sized for the
     per-device slice of the stream.
@@ -537,10 +675,12 @@ def plan_for(at: AltoTensor, rank: int, **kwargs) -> ExecutionPlan:
 def build_views(at: AltoTensor, plan: ExecutionPlan
                 ) -> dict[int, OrientedView]:
     """Oriented-traversal copies for exactly the modes the plan routes
-    output-oriented (preserves the single-copy property elsewhere)."""
+    output-oriented — either variant, one-hot merge or scratch carry,
+    both consume the same row-sorted view (preserves the single-copy
+    property elsewhere)."""
     from repro.core.alto import oriented_view
     return {m.mode: oriented_view(at, m.mode) for m in plan.modes
-            if m.traversal is heuristics.Traversal.OUTPUT_ORIENTED}
+            if heuristics.is_oriented(m.traversal)}
 
 
 # ---------------------------------------------------------------------------
@@ -561,17 +701,24 @@ def execute_mttkrp(plan: ExecutionPlan, at: AltoTensor,
         from repro.dist import cpd as dist_cpd
         return dist_cpd.sharded_mttkrp(plan, at, views, factors, mode)
     mp = plan.modes[mode]
-    oriented = (mp.traversal is heuristics.Traversal.OUTPUT_ORIENTED
+    oriented = (heuristics.is_oriented(mp.traversal)
                 and views is not None and mode in views)
     if plan.backend == "pallas":
         from repro.kernels import ops
         if oriented:
+            if mp.traversal is heuristics.Traversal.ORIENTED_CARRY:
+                return ops.mttkrp_oriented_carry(views[mode], factors,
+                                                 block_m=mp.block_m,
+                                                 r_block=mp.r_block,
+                                                 interpret=plan.interpret)
             return ops.mttkrp_oriented(views[mode], factors,
                                        block_m=mp.block_m,
                                        r_block=mp.r_block,
                                        interpret=plan.interpret)
         return ops.mttkrp(at, factors, mode, r_block=mp.r_block,
                           interpret=plan.interpret)
+    # reference backend: both oriented variants are the same sorted
+    # segment_sum — the carry is a kernel-level distinction.
     if oriented:
         return core_mttkrp.mttkrp_oriented(views[mode], factors)
     return core_mttkrp.mttkrp_recursive(at, factors, mode)
@@ -593,11 +740,15 @@ def execute_phi(plan: ExecutionPlan, at: AltoTensor,
         return dist_cpd.sharded_phi(plan, at, view, B, mode,
                                     factors=factors, pi=pi, eps=eps)
     mp = plan.modes[mode]
-    oriented = (mp.traversal is heuristics.Traversal.OUTPUT_ORIENTED
+    oriented = (heuristics.is_oriented(mp.traversal)
                 and view is not None)
     if plan.backend == "pallas":
         from repro.kernels import ops
         if oriented:
+            if mp.traversal is heuristics.Traversal.ORIENTED_CARRY:
+                return ops.cpapr_phi_oriented_carry(
+                    view, B, factors=factors, pi=pi, eps=eps,
+                    block_m=mp.block_m, interpret=plan.interpret)
             return ops.cpapr_phi_oriented(view, B, factors=factors, pi=pi,
                                           eps=eps, block_m=mp.block_m,
                                           interpret=plan.interpret)

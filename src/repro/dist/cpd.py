@@ -49,6 +49,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import alto
 from repro.core import cpals
+from repro.core import heuristics
 from repro.core import plan as plan_mod
 from repro.core.alto import AltoTensor, OrientedView
 from repro.core.mttkrp import krp_rows
@@ -86,6 +87,14 @@ def local_mttkrp(plan: plan_mod.ExecutionPlan, mode: int, rows, words,
     I_n = meta.dims[mode]
     if plan.backend == "pallas":
         mp = plan.modes[mode]
+        if mp.traversal is heuristics.Traversal.ORIENTED_CARRY:
+            # Shard-local scratch-carry scan: the final (I_n, R) rows come
+            # straight out of the kernel — boundary-run carries survive
+            # only at shard boundaries, where the psum merges them.
+            return _oriented.mttkrp_oriented_carry_pallas(
+                meta.enc, mode, rows, words, values, list(factors),
+                block_m=mp.block_m, r_block=mp.r_block,
+                interpret=ops._auto_interpret(plan.interpret))
         partials = _oriented.mttkrp_oriented_partials_pallas(
             meta.enc, mode, rows, words, values, list(factors),
             block_m=mp.block_m, r_block=mp.r_block,
@@ -108,10 +117,17 @@ def local_phi(plan: plan_mod.ExecutionPlan, mode: int, eps: float, rows,
     meta = plan.meta
     I_n = meta.dims[mode]
     if plan.backend == "pallas":
+        mp = plan.modes[mode]
+        if mp.traversal is heuristics.Traversal.ORIENTED_CARRY:
+            return _oriented.phi_oriented_carry_pallas(
+                meta.enc, mode, eps, rows, words, values, B,
+                factors=list(factors) if factors is not None else None,
+                pi=pi, block_m=mp.block_m,
+                interpret=ops._auto_interpret(plan.interpret))
         partials = _oriented.phi_oriented_partials_pallas(
             meta.enc, mode, eps, rows, words, values, B,
             factors=list(factors) if factors is not None else None, pi=pi,
-            block_m=plan.modes[mode].block_m,
+            block_m=mp.block_m,
             interpret=ops._auto_interpret(plan.interpret))
         return ops.segment_merge(partials, rows, I_n)
     if pi is None:

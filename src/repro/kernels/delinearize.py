@@ -37,10 +37,12 @@ def _delinearize_kernel(enc: AltoEncoding, words_ref, coords_ref):
 def delinearize_pallas(enc: AltoEncoding, words: jnp.ndarray,
                        block_m: int = DEFAULT_BLOCK_M,
                        interpret: bool = True) -> jnp.ndarray:
-    """(M, n_words) u32 -> (M, N) int32. M must be a multiple of block_m
-    (callers pad; ALTO tensors are already chunk-padded)."""
+    """(M, n_words) u32 -> (M, N) int32. M must be an exact multiple of
+    block_m, validated like every other kernel — callers pad through the
+    shared `ops.pad_sorted_stream` rule (the `ops.delinearize` wrapper
+    does, slicing the tail back off) instead of this kernel silently
+    shrinking the block to fit."""
     M, W = words.shape
-    block_m = min(block_m, M)
     if M % block_m:
         raise ValueError(f"M={M} not a multiple of block_m={block_m}")
     grid = (M // block_m,)

@@ -30,6 +30,32 @@ VMEM per grid step (f32): block_m·(W + 2 + 2·r_block + block_m) +
 this fits the 16 MB budget (divided by the shard count for mesh-bearing
 plans, see `core.plan`).
 
+**Scratch-carry variant** (`*_carry_pallas`, paper §4.2's output-oriented
+reduction taken to its conclusion): the one-hot kernel above pays an
+O(block_m²) MXU matmul per block and materializes `(n_blocks, block_m, R)`
+partials to HBM that `ops.segment_merge` immediately re-scatters — an
+intermediate 10-100× larger than the final `(I_n, R)` output. ALTO
+(arXiv:2102.10245) and Dynasor (arXiv:2309.09131) instead carry partial
+sums *through* the sorted-stream scan. The carry kernels do exactly that
+on a **sequential 1-D block grid**:
+
+  * in-block segment sums come from a VPU scatter-add over the run-rank
+    ids (`zeros.at[seg].add(contrib)`) — no (block_m, block_m) one-hot;
+  * the `(I_n, r_block)` output tile stays VMEM-resident across the whole
+    scan (constant out index_map; `input_output_aliases` seeds it from a
+    zero buffer), and every *closed* run's total is scattered straight
+    into it — no partials buffer, no host-side merge pass;
+  * the block's final run is *open* (it may continue into the next
+    block): its partial sum rides a `(1, r_block)` VMEM scratch plus an
+    SMEM row id to the next grid step, where it either merges into the
+    first run or is flushed. Boundary carries therefore survive only at
+    *shard* boundaries, merged by the existing psum path in `dist.cpd`.
+
+Carry-vs-one-hot parity is bit-exact: within-block sums accumulate in the
+same element order, and the carry chain re-associates cross-block partials
+only by IEEE-commutative swaps (x+y == y+x bitwise), which
+`tests/test_oriented_carry.py` pins on adversarial run layouts.
+
 Invariants: the input stream is row-sorted with length an exact multiple
 of block_m (callers pad — `ops` / `dist.cpd`); row ids are global, and the
 carry-merge correctness condition is that `ops.segment_merge` reproduces
@@ -44,6 +70,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.encoding import AltoEncoding
 from repro.kernels.mttkrp import _decode
@@ -216,5 +243,220 @@ def phi_oriented_partials_pallas(enc: AltoEncoding, mode: int, eps: float,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_m, R), lambda b: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((n_blocks, block_m, R), B.dtype),
+        interpret=interpret,
+    )(*args)
+
+
+# ---------------------------------------------------------------------------
+# Scratch-carry sequential-grid variant (no partials buffer, no host merge)
+# ---------------------------------------------------------------------------
+
+def _carry_step(b, n_blocks, rows, contrib, out_ref, crow_ref, cval_ref):
+    """One grid step of the scratch-carry scan, shared by MTTKRP and Φ.
+
+    ``b`` is the position along the sequential block axis. In-block
+    segment sums are formed by a scatter-add over the run-rank ids (the
+    accumulation visits elements in stream order, matching the one-hot
+    matmul bit-for-bit); closed runs land in the resident ``out_ref``
+    block, the open final run replaces the carry scratch. The carry from
+    the previous step either merges into this block's first run (same
+    row) or is flushed — commutative re-association only, so the chain
+    reproduces `ops.segment_merge`'s block-ordered adds bitwise.
+    """
+    block_m = rows.shape[0]
+
+    @pl.when(b == 0)
+    def _():                                   # fresh scan: empty carry
+        crow_ref[0] = -1
+        cval_ref[...] = jnp.zeros(cval_ref.shape, cval_ref.dtype)
+
+    prev_row = crow_ref[0]
+    prev_val = cval_ref[0]
+
+    seg, idx = _block_segments(rows)
+    seg_sums = jnp.zeros(contrib.shape, contrib.dtype).at[seg].add(contrib)
+    seg_rows = jnp.zeros((block_m,), jnp.int32).at[seg].set(rows)
+    n_segs = seg[block_m - 1] + 1
+
+    zero = jnp.zeros_like(prev_val)
+    merge = prev_row == rows[0]                # open run continues here
+    seg_sums = seg_sums.at[0].add(jnp.where(merge, prev_val, zero))
+    flush = jnp.logical_and(prev_row >= 0, jnp.logical_not(merge))
+    flush_row = jnp.where(flush, prev_row, 0)
+    flush_val = jnp.where(flush, prev_val, zero)
+
+    new_val = jax.lax.dynamic_index_in_dim(seg_sums, n_segs - 1, 0,
+                                           keepdims=False)
+    last = b == n_blocks - 1
+    fin_row = jnp.where(last, rows[block_m - 1], 0)   # close the stream
+    fin_val = jnp.where(last, new_val, zero)
+
+    # Closed runs + (up to) two carry flushes, one combined scatter-add
+    # into the resident output; masked slots add 0.0 to row 0, harmless.
+    closed = idx < n_segs - 1
+    srows = jnp.concatenate([jnp.where(closed, seg_rows, 0),
+                             flush_row[None], fin_row[None]])
+    svals = jnp.concatenate(
+        [jnp.where(closed[:, None], seg_sums, jnp.zeros_like(seg_sums)),
+         flush_val[None], fin_val[None]])
+    out_ref[...] = out_ref[...].at[srows].add(svals)
+
+    crow_ref[0] = rows[block_m - 1]
+    cval_ref[0] = new_val
+
+
+def _mttkrp_carry_kernel(enc: AltoEncoding, mode: int,
+                         rows_ref, words_ref, vals_ref, *refs):
+    """Grid step: (rank tile r, sorted block b) -> resident (I_n, rb)."""
+    factor_refs = refs[:-4]
+    out_ref, crow_ref, cval_ref = refs[-3], refs[-2], refs[-1]
+    # refs[-4] is the zero init buffer aliased onto out_ref — never read.
+    rows = rows_ref[...]
+    words = words_ref[...]
+    vals = vals_ref[...]
+    coords = _decode(enc, words)
+
+    krp = None
+    fi = 0
+    for m in range(enc.ndim):
+        if m == mode:
+            continue
+        gathered = jnp.take(factor_refs[fi][...], coords[m], axis=0)
+        krp = gathered if krp is None else krp * gathered
+        fi += 1
+    contrib = vals[:, None] * krp              # (block_m, rb)
+
+    _carry_step(pl.program_id(1), pl.num_programs(1), rows, contrib,
+                out_ref, crow_ref, cval_ref)
+
+
+def mttkrp_oriented_carry_pallas(enc: AltoEncoding, mode: int,
+                                 rows: jnp.ndarray, words: jnp.ndarray,
+                                 values: jnp.ndarray, factors,
+                                 block_m: int = DEFAULT_BLOCK_M,
+                                 r_block: int | None = None,
+                                 interpret: bool = True) -> jnp.ndarray:
+    """Scratch-carry oriented MTTKRP: sorted stream -> (I_n, R) directly.
+
+    Same input contract as `mttkrp_oriented_partials_pallas`, but the
+    result is the final row-reduced MTTKRP — there is no partials buffer
+    and callers must NOT run `ops.segment_merge` on this path. The grid
+    is (rank tiles, blocks) with the block axis innermost, so each rank
+    tile is one sequential scan and the carry scratch resets at its
+    first step.
+    """
+    M, W = words.shape
+    if M % block_m:
+        raise ValueError(f"nnz {M} not a multiple of block_m {block_m}")
+    n_blocks = M // block_m
+    R = factors[0].shape[1]
+    rb = r_block or R
+    if R % rb:
+        raise ValueError(f"rank {R} not a multiple of r_block {rb}")
+    I_n = enc.dims[mode]
+    dtype = factors[0].dtype
+    others = [f for m, f in enumerate(factors) if m != mode]
+
+    in_specs = [
+        pl.BlockSpec((block_m,), lambda r, b: (b,)),           # rows
+        pl.BlockSpec((block_m, W), lambda r, b: (b, 0)),       # words
+        pl.BlockSpec((block_m,), lambda r, b: (b,)),           # values
+    ] + [
+        pl.BlockSpec((f.shape[0], rb), lambda r, b: (0, r)) for f in others
+    ] + [
+        pl.BlockSpec((I_n, rb), lambda r, b: (0, r)),          # zero init
+    ]
+    return pl.pallas_call(
+        functools.partial(_mttkrp_carry_kernel, enc, mode),
+        grid=(R // rb, n_blocks),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((I_n, rb), lambda r, b: (0, r)),
+        out_shape=jax.ShapeDtypeStruct((I_n, R), dtype),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32),
+                        pltpu.VMEM((1, rb), dtype)],
+        input_output_aliases={3 + len(others): 0},
+        interpret=interpret,
+    )(rows, words, values, *others, jnp.zeros((I_n, R), dtype))
+
+
+def _phi_carry_kernel(enc: AltoEncoding, mode: int, eps: float,
+                      pre_pi: bool,
+                      rows_ref, words_ref, vals_ref, b_ref, *refs):
+    """Grid step: fused Φ update + carry scan, full rank, resident out."""
+    out_ref, crow_ref, cval_ref = refs[-3], refs[-2], refs[-1]
+    operand_refs = refs[:-4]                   # Π tile or other factors
+    rows = rows_ref[...]
+    vals = vals_ref[...]
+
+    if pre_pi:
+        krp = operand_refs[0][...]             # Π rows (block_m, R)
+    else:
+        coords = _decode(enc, words_ref[...])
+        krp = None
+        fi = 0
+        for m in range(enc.ndim):
+            if m == mode:
+                continue
+            gathered = jnp.take(operand_refs[fi][...], coords[m], axis=0)
+            krp = gathered if krp is None else krp * gathered
+            fi += 1
+
+    b_rows = jnp.take(b_ref[...], rows, axis=0)        # (block_m, R)
+    denom = jnp.maximum(jnp.sum(b_rows * krp, axis=-1), eps)
+    contrib = (vals / denom)[:, None] * krp
+
+    _carry_step(pl.program_id(0), pl.num_programs(0), rows, contrib,
+                out_ref, crow_ref, cval_ref)
+
+
+def phi_oriented_carry_pallas(enc: AltoEncoding, mode: int, eps: float,
+                              rows: jnp.ndarray, words: jnp.ndarray,
+                              values: jnp.ndarray, B: jnp.ndarray,
+                              factors=None, pi: jnp.ndarray | None = None,
+                              block_m: int = DEFAULT_BLOCK_M,
+                              interpret: bool = True) -> jnp.ndarray:
+    """Scratch-carry fused Φ: sorted stream -> (I_n, R) directly.
+
+    Same operand contract as `phi_oriented_partials_pallas` (pass exactly
+    one of ``pi``/``factors``; no rank tiling — the denominator needs the
+    full rank), but the result is the final row-reduced Φ with no
+    partials buffer and no merge pass.
+    """
+    pre_pi = pi is not None
+    if pre_pi == (factors is not None):
+        raise ValueError("pass exactly one of pi= / factors=")
+    M, W = words.shape
+    if M % block_m:
+        raise ValueError(f"nnz {M} not a multiple of block_m {block_m}")
+    n_blocks = M // block_m
+    I_n, R = B.shape
+
+    in_specs = [
+        pl.BlockSpec((block_m,), lambda b: (b,)),              # rows
+        pl.BlockSpec((block_m, W), lambda b: (b, 0)),          # words
+        pl.BlockSpec((block_m,), lambda b: (b,)),              # values
+        pl.BlockSpec(B.shape, lambda b: (0, 0)),               # B resident
+    ]
+    args = [rows, words, values, B]
+    if pre_pi:
+        in_specs.append(pl.BlockSpec((block_m, R), lambda b: (b, 0)))
+        args.append(pi)
+    else:
+        others = [f for m, f in enumerate(factors) if m != mode]
+        in_specs += [pl.BlockSpec(f.shape, lambda b: (0, 0)) for f in others]
+        args += others
+    init_idx = len(args)
+    in_specs.append(pl.BlockSpec((I_n, R), lambda b: (0, 0)))  # zero init
+    args.append(jnp.zeros((I_n, R), B.dtype))
+
+    return pl.pallas_call(
+        functools.partial(_phi_carry_kernel, enc, mode, eps, pre_pi),
+        grid=(n_blocks,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((I_n, R), lambda b: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((I_n, R), B.dtype),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32),
+                        pltpu.VMEM((1, R), B.dtype)],
+        input_output_aliases={init_idx: 0},
         interpret=interpret,
     )(*args)

@@ -154,21 +154,25 @@ def pad_sorted_stream(rows, words, values, mult: int, pi=None):
     """Pad the sorted stream to a multiple of ``mult`` elements.
 
     The single implementation of the padding rule the carry merge relies
-    on (`mttkrp_oriented`'s block grid, `dist.cpd`'s shard cut): the
-    final row/words are replicated (stream stays sorted, padding joins
-    the final segment) with zero values, so padded elements contribute
-    nothing to any reduction. ``pi`` (ALTO-PRE Khatri-Rao rows) pads
-    with zeros. Returns ``(rows, words, values, pi)``.
+    on (`mttkrp_oriented`'s block grid, `dist.cpd`'s shard cut, the
+    `delinearize` wrapper's word-only stream): the final row/words are
+    replicated (stream stays sorted, padding joins the final segment)
+    with zero values, so padded elements contribute nothing to any
+    reduction. ``rows``/``values``/``pi`` may each be None (padding is
+    skipped for absent operands — `delinearize` pads words alone).
+    Returns ``(rows, words, values, pi)``.
     """
-    M = rows.shape[0]
+    M = words.shape[0]
     pad = (-M) % mult
     if pad == 0:
         return rows, words, values, pi
-    rows = jnp.concatenate([rows, jnp.broadcast_to(rows[-1:], (pad,))])
+    if rows is not None:
+        rows = jnp.concatenate([rows, jnp.broadcast_to(rows[-1:], (pad,))])
     words = jnp.concatenate(
         [words, jnp.broadcast_to(words[-1:], (pad, words.shape[1]))])
-    values = jnp.concatenate(
-        [values, jnp.zeros((pad,), values.dtype)])
+    if values is not None:
+        values = jnp.concatenate(
+            [values, jnp.zeros((pad,), values.dtype)])
     if pi is not None:
         pi = jnp.concatenate([pi, jnp.zeros((pad, pi.shape[1]), pi.dtype)])
     return rows, words, values, pi
@@ -181,20 +185,25 @@ def pad_sorted_stream(rows, words, values, mult: int, pi=None):
 def delinearize(enc: AltoEncoding, words: jnp.ndarray,
                 block_m: int = _delin.DEFAULT_BLOCK_M,
                 interpret: bool | None = None) -> jnp.ndarray:
-    """ALTO index words -> int32 coordinates (bit-scatter kernel)."""
-    M = words.shape[0]
-    bm = min(block_m, M)
-    while M % bm:
-        bm -= 1
+    """ALTO index words -> int32 coordinates (bit-scatter kernel).
+
+    The word stream is padded to the block multiple through the shared
+    `pad_sorted_stream` rule (replicated final element — the same rule
+    every oriented kernel relies on) and the padded tail is sliced off
+    the coordinate output, so the kernel always sees full blocks at the
+    caller's requested ``block_m`` instead of silently shrinking it.
+    """
     interp = _auto_interpret(interpret)
 
     def build():
         def run(words):
-            return _delin.delinearize_pallas(enc, words, block_m=bm,
-                                             interpret=interp)
+            _, padded, _, _ = pad_sorted_stream(None, words, None, block_m)
+            coords = _delin.delinearize_pallas(enc, padded, block_m=block_m,
+                                               interpret=interp)
+            return coords[:words.shape[0]]
         return jax.jit(run)
 
-    fn = _cached_executable(("delin", enc, bm, interp), build)
+    fn = _cached_executable(("delin", enc, block_m, interp), build)
     return fn(words)
 
 
@@ -241,6 +250,37 @@ def mttkrp_oriented(view: OrientedView, factors,
 
     fn = _cached_executable(
         ("mttkrp_ori", meta, mode, block_m, rb, interp), build)
+    return fn(view.rows, view.words, view.values, list(factors))
+
+
+def mttkrp_oriented_carry(view: OrientedView, factors,
+                          block_m: int = _oriented.DEFAULT_BLOCK_M,
+                          r_block: int | None = None,
+                          interpret: bool | None = None) -> jnp.ndarray:
+    """Scratch-carry oriented MTTKRP: sequential Pallas scan, no merge.
+
+    The kernel writes the final ``(I_n, R)`` rows directly (resident
+    output tile + inter-block carry scratch), so this path materializes
+    no ``(n_blocks, block_m, R)`` partials and runs no `segment_merge` —
+    the carry-merge work happens inside the scan. Bit-identical to
+    `mttkrp_oriented` at the same tiling.
+    """
+    meta = view.meta
+    mode = view.mode
+    interp = _auto_interpret(interpret)
+    rb = r_block or factors[mode].shape[1]
+
+    def build():
+        def run(rows, words, values, factors):
+            rows, words, values, _ = pad_sorted_stream(rows, words, values,
+                                                       block_m)
+            return _oriented.mttkrp_oriented_carry_pallas(
+                meta.enc, mode, rows, words, values, factors,
+                block_m=block_m, r_block=rb, interpret=interp)
+        return jax.jit(run)
+
+    fn = _cached_executable(
+        ("mttkrp_carry", meta, mode, block_m, rb, interp), build)
     return fn(view.rows, view.words, view.values, list(factors))
 
 
@@ -291,5 +331,31 @@ def cpapr_phi_oriented(view: OrientedView, B: jnp.ndarray,
 
     fn = _cached_executable(
         ("phi_ori", meta, mode, eps, pre_pi, block_m, interp), build)
+    return fn(view.rows, view.words, view.values, B,
+              list(factors) if factors is not None else None, pi)
+
+
+def cpapr_phi_oriented_carry(view: OrientedView, B: jnp.ndarray,
+                             factors=None, pi: jnp.ndarray | None = None,
+                             eps: float = 1e-10,
+                             block_m: int = _oriented.DEFAULT_BLOCK_M,
+                             interpret: bool | None = None) -> jnp.ndarray:
+    """Scratch-carry fused Φ: sequential Pallas scan, no merge pass."""
+    meta = view.meta
+    mode = view.mode
+    interp = _auto_interpret(interpret)
+    pre_pi = pi is not None
+
+    def build():
+        def run(rows, words, values, B, factors, pi):
+            rows, words, values, pi = pad_sorted_stream(rows, words, values,
+                                                        block_m, pi=pi)
+            return _oriented.phi_oriented_carry_pallas(
+                meta.enc, mode, eps, rows, words, values, B,
+                factors=factors, pi=pi, block_m=block_m, interpret=interp)
+        return jax.jit(run)
+
+    fn = _cached_executable(
+        ("phi_carry", meta, mode, eps, pre_pi, block_m, interp), build)
     return fn(view.rows, view.words, view.values, B,
               list(factors) if factors is not None else None, pi)

@@ -200,6 +200,30 @@ class TestStoreRobustness:
                            interpret=True, tune="auto")
         assert ops.timing_runs() == runs
 
+    def test_pre_carry_store_loads_as_empty(self, store):
+        """A version-1 store predates the ORIENTED_CARRY candidate: its
+        winners were measured without the carry traversal in the space
+        and must NOT mask it — the v2 bump makes every v1 file load as
+        empty, so tune='auto' re-measures over the full space."""
+        assert autotune.PLAN_STORE_VERSION >= 2
+        at = _tensor()
+        plan, _ = _tune(at)
+        payload = json.loads(store.read_text())
+        payload["version"] = 1                  # a pre-carry store file
+        store.write_text(json.dumps(payload))
+        assert autotune.load_store() == {}      # pre-carry == empty
+        assert autotune.lookup(at.meta, RANK, backend="pallas") is None
+        # re-tuning measures again (store miss) and rewrites at v2 with
+        # the carry traversal visible in the candidate space
+        runs = ops.timing_runs()
+        plan2, report = _tune(at)
+        assert ops.timing_runs() > runs
+        assert json.loads(store.read_text())["version"] \
+            == autotune.PLAN_STORE_VERSION
+        timed = {c.traversal for mr in report.modes
+                 for c in mr.candidates}
+        assert "oriented_carry" in timed
+
     def test_malformed_entry_is_a_miss(self, store):
         at = _tensor()
         _tune(at)
@@ -302,8 +326,14 @@ class TestCandidateSpace:
                     assert c.phi_vmem_bytes <= budget
 
     def test_forced_oriented_excludes_recursive(self):
+        """force_oriented admits both output-oriented variants (one-hot
+        merge and scratch carry — `dist.cpd` shards either), never the
+        recursive traversal."""
         at = _tensor()
         cands = plan_mod.candidate_mode_plans(at.meta, 0, RANK,
                                               force_oriented=True)
-        assert all(c.traversal is heuristics.Traversal.OUTPUT_ORIENTED
-                   for c in cands)
+        assert all(heuristics.is_oriented(c.traversal) for c in cands)
+        got = {c.traversal for c in cands}
+        assert heuristics.Traversal.RECURSIVE not in got
+        assert got == {heuristics.Traversal.OUTPUT_ORIENTED,
+                       heuristics.Traversal.ORIENTED_CARRY}

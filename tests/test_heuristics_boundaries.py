@@ -89,11 +89,21 @@ class TestPlanHonorsHeuristics:
         (1.0, 1.0, 1.0),
     ])
     def test_traversal_decisions_copied_into_plan(self, reuse):
+        """The plan honors the family choice; an output-oriented mode is
+        then refined to one-hot merge vs scratch carry by the traffic
+        model (`choose_oriented_variant`), which the plan must copy."""
         meta = _meta_with_reuse(reuse)
         plan = plan_mod.make_plan(meta, 8)
         for mode in range(3):
-            assert plan.modes[mode].traversal \
-                is heuristics.choose_traversal(meta, mode)
+            family = heuristics.choose_traversal(meta, mode)
+            got = plan.modes[mode].traversal
+            if family is Traversal.RECURSIVE:
+                assert got is Traversal.RECURSIVE
+            else:
+                assert heuristics.is_oriented(got)
+                assert got is heuristics.choose_oriented_variant(
+                    meta, mode, 8,
+                    carry_feasible=plan_mod.carry_fits_vmem(meta, mode, 8))
 
     def test_pi_policy_copied_into_plan(self):
         meta = _meta_with_reuse((1.0, 1.0, 1.0))
@@ -242,13 +252,143 @@ class TestPhiVmemFootprint:
     def test_mode_plan_records_phi_footprint(self):
         meta = self._meta()
         plan = plan_mod.make_plan(meta, 8)
-        from repro.core.heuristics import Traversal
         pre = plan.pi_policy is heuristics.PiPolicy.PRE
+        assert Traversal.ORIENTED_CARRY in {mp.traversal
+                                            for mp in plan.modes}
         for mp in plan.modes:
             if mp.traversal is Traversal.OUTPUT_ORIENTED:
                 want = plan_mod.phi_oriented_vmem_bytes(
+                    meta, mp.mode, mp.block_m, plan.rank, pre_pi=pre)
+            elif mp.traversal is Traversal.ORIENTED_CARRY:
+                want = plan_mod.phi_oriented_carry_vmem_bytes(
                     meta, mp.mode, mp.block_m, plan.rank, pre_pi=pre)
             else:
                 want = plan_mod.phi_recursive_vmem_bytes(
                     meta, mp.mode, plan.rank, pre_pi=pre)
             assert mp.phi_vmem_bytes == want > 0
+
+
+class TestCarryVmemFootprint:
+    """Exact byte accounting of the scratch-carry kernel's VMEM model:
+    no (block_m, block_m) one-hot, but the (I_mode, r_block) output tile
+    and the carry scratch are resident across the whole sequential scan."""
+
+    def _meta(self, dims=(64, 48, 32), nnz=2000, L=4):
+        x = synthetic.uniform_tensor(dims, nnz, seed=0)
+        return alto.build(x, n_partitions=L).meta
+
+    def test_carry_exact_bytes(self):
+        meta = self._meta()
+        mode, bm, rb, db = 1, 64, 8, 4
+        W = meta.enc.n_words
+        want = (bm * W * 4                      # words tile
+                + bm * 4                        # rows tile (int32)
+                + bm * db                       # values tile
+                + 3 * bm * rb * db              # krp + contrib + seg sums
+                + meta.dims[mode] * rb * db     # RESIDENT output tile
+                + rb * db                       # carry scratch row
+                + sum(I for m, I in enumerate(meta.dims)
+                      if m != mode) * rb * db)  # resident other factors
+        got = plan_mod.oriented_carry_vmem_bytes(meta, mode, bm, rb, db)
+        assert got == want
+
+    def test_phi_carry_exact_bytes_otf(self):
+        meta = self._meta()
+        mode, bm, R, db = 0, 32, 8, 4
+        W = meta.enc.n_words
+        want = (bm * W * 4                      # words tile
+                + bm * 4                        # rows tile
+                + bm * db                       # values tile
+                + meta.dims[mode] * R * db      # RESIDENT full-rank B
+                + bm * R * db                   # gathered B block rows
+                + 2 * bm * R * db               # krp + contrib
+                + bm * R * db                   # segment sums
+                + meta.dims[mode] * R * db      # RESIDENT output block
+                + R * db                        # carry scratch row
+                + sum(I for m, I in enumerate(meta.dims)
+                      if m != mode) * R * db)   # resident other factors
+        got = plan_mod.phi_oriented_carry_vmem_bytes(meta, mode, bm, R, db)
+        assert got == want
+
+    def test_phi_carry_pre_streams_pi_instead_of_factors(self):
+        meta = self._meta()
+        mode, bm, R, db = 0, 128, 16, 4
+        otf = plan_mod.phi_oriented_carry_vmem_bytes(meta, mode, bm, R, db,
+                                                     pre_pi=False)
+        pre = plan_mod.phi_oriented_carry_vmem_bytes(meta, mode, bm, R, db,
+                                                     pre_pi=True)
+        others = sum(I for m, I in enumerate(meta.dims) if m != mode)
+        assert otf - pre == (others - bm) * R * db
+
+    def test_no_onehot_term(self):
+        """Doubling block_m must grow the carry footprint linearly (the
+        one-hot kernel grows quadratically) — the whole point of the
+        rewrite."""
+        meta = self._meta()
+        rb = 4
+        c = [plan_mod.oriented_carry_vmem_bytes(meta, 0, bm, rb)
+             for bm in (128, 256, 512)]
+        assert c[2] - c[1] == 2 * (c[1] - c[0])     # linear in block_m
+        o = [plan_mod.oriented_vmem_bytes(meta, 0, bm, rb)
+             for bm in (128, 256, 512)]
+        assert o[2] - o[1] > 2 * (o[1] - o[0])      # quadratic one-hot
+
+    def test_resident_output_scales_with_mode_dim(self):
+        small = self._meta(dims=(64, 48, 32))
+        big = self._meta(dims=(4096, 48, 32))
+        rb, bm = 8, 64
+        delta = (plan_mod.oriented_carry_vmem_bytes(big, 0, bm, rb)
+                 - plan_mod.oriented_carry_vmem_bytes(small, 0, bm, rb))
+        assert delta >= (4096 - 64) * rb * 4
+
+    def test_carry_feasibility_gate(self):
+        """carry_fits_vmem is a hard routing gate: below the resident
+        output's floor the static plan must route the one-hot merge."""
+        meta = self._meta()
+        floor = plan_mod.oriented_carry_vmem_bytes(
+            meta, 0, plan_mod.MIN_BLOCK_M, 1)
+        assert plan_mod.carry_fits_vmem(meta, 0, 8, vmem_limit=floor)
+        assert not plan_mod.carry_fits_vmem(meta, 0, 8,
+                                            vmem_limit=floor - 1)
+        mp = plan_mod.static_mode_plan(meta, 0, 8, vmem_limit=floor - 1)
+        assert mp.traversal is Traversal.OUTPUT_ORIENTED
+        # and the candidate space hard-gates carry candidates too
+        cands = plan_mod.candidate_mode_plans(meta, 0, 8,
+                                              vmem_limit=floor - 1)
+        assert Traversal.ORIENTED_CARRY not in {c.traversal for c in cands}
+
+
+class TestOrientedVariantTrafficBoundary:
+    """The one-hot-vs-carry refinement is a pure HBM-traffic comparison:
+    carry wins iff 2·I_n·R < 2·M·R + M·4/db + I_n·R (in elements)."""
+
+    def _meta_with_dims(self, dims, nnz):
+        x = synthetic.uniform_tensor(dims, nnz, seed=0)
+        at = alto.build(x, n_partitions=2)
+        return dataclasses.replace(at.meta, fiber_reuse=(1.0,) * len(dims))
+
+    def test_traffic_terms_exact(self):
+        meta = self._meta_with_dims((40, 30, 20), 500)
+        R, db = 16, 4
+        M = heuristics.stream_len(meta)
+        assert heuristics.oriented_merge_traffic_bytes(meta, 0, R, db) \
+            == 2 * M * R * db + M * 4 + meta.dims[0] * R * db
+        assert heuristics.carry_traffic_bytes(meta, 0, R, db) \
+            == 2 * meta.dims[0] * R * db
+
+    def test_nnz_heavy_mode_goes_carry(self):
+        meta = self._meta_with_dims((40, 30, 20), 5000)   # stream >> I_0
+        assert heuristics.choose_oriented_variant(meta, 0, 16) \
+            is heuristics.Traversal.ORIENTED_CARRY
+
+    def test_hyper_sparse_long_mode_stays_onehot(self):
+        # I_0 dwarfs the stream: resident-output traffic loses
+        meta = self._meta_with_dims((100_000, 4, 3), 64)
+        assert heuristics.choose_oriented_variant(meta, 0, 16) \
+            is heuristics.Traversal.OUTPUT_ORIENTED
+
+    def test_infeasible_carry_never_chosen(self):
+        meta = self._meta_with_dims((40, 30, 20), 5000)
+        assert heuristics.choose_oriented_variant(
+            meta, 0, 16, carry_feasible=False) \
+            is heuristics.Traversal.OUTPUT_ORIENTED

@@ -1,0 +1,175 @@
+"""Scratch-carry oriented kernels vs the one-hot merge path vs jnp.
+
+Adversarial *run layouts* for the sorted-stream reduction — the shapes
+where the inter-block carry logic can go wrong:
+
+  * every row identical (a single run covering every block);
+  * every row distinct (no run ever crosses a boundary, carry always
+    flushes);
+  * one run spanning the entire stream including the alto/block padding;
+  * a run crossing >= 3 block boundaries with noise on both sides.
+
+The acceptance condition is *bit-identical* MTTKRP/Φ between
+`ops.mttkrp_oriented`+`segment_merge` and `ops.mttkrp_oriented_carry`:
+within-block segment sums accumulate in the same element order, and the
+carry chain only re-associates cross-block partials by IEEE-commutative
+swaps (see `kernels/mttkrp_oriented.py`). The jnp oracle reduces in a
+different association order (flat segment_sum), so it is held to a tight
+relative tolerance instead.
+
+Runs on the hermetic tests/proptest.py harness (no hypothesis offline).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import given, settings, strategies as st
+
+from repro.core import alto, mttkrp as core_mttkrp
+from repro.kernels import ops
+from repro.sparse.tensor import SparseTensor
+
+TOL = 1e-5
+DIMS = (29, 13, 7)          # non-pow2; mode 0 is the reduction target
+MODE = 0
+
+
+def _stream_tensor(row_counts, seed):
+    """SparseTensor whose mode-0 rows appear with the given multiplicities
+    (the oriented view of mode 0 is then exactly the prescribed run
+    layout, up to alto's replicate-last padding)."""
+    rng = np.random.default_rng(seed)
+    rows = np.repeat(np.arange(len(row_counts), dtype=np.int32),
+                     row_counts)
+    coords = np.stack(
+        [rows] + [rng.integers(0, I, size=rows.shape[0]).astype(np.int32)
+                  for I in DIMS[1:]], axis=1)
+    values = rng.standard_normal(rows.shape[0]).astype(np.float32)
+    return SparseTensor(DIMS, coords, values)
+
+
+def _factors(seed, R=8):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(np.abs(rng.standard_normal((I, R))
+                               ).astype(np.float32) + 0.05) for I in DIMS]
+
+
+def _layout_counts(layout, block_m, rng):
+    """Per-row multiplicities realizing the adversarial layout."""
+    I0 = DIMS[0]
+    counts = np.zeros(I0, dtype=np.int64)
+    if layout == "identical":
+        # one row owns the whole stream: a single run covering every
+        # block AND >= 3 block boundaries
+        counts[int(rng.integers(I0))] = 4 * block_m + 3
+    elif layout == "distinct":
+        # every present row appears exactly once: blocks of all-distinct
+        # rows, the carry flushes at every boundary
+        n = min(I0, 3 * block_m)
+        counts[rng.choice(I0, size=n, replace=False)] = 1
+    elif layout == "boundary_run":
+        # noise, then one run crossing >= 3 block boundaries, then noise
+        counts[:] = rng.integers(0, 3, size=I0)
+        counts[int(rng.integers(I0))] = 3 * block_m + 2
+    else:                                   # "mixed"
+        counts[:] = rng.integers(0, 2 * block_m, size=I0)
+        if counts.sum() == 0:
+            counts[0] = 1
+    return counts
+
+
+def _assert_parity(x, block_m, r_block, seed):
+    at = alto.build(x, n_partitions=2)
+    view = alto.oriented_view(at, MODE)
+    factors = _factors(seed)
+
+    ori = ops.mttkrp_oriented(view, factors, block_m=block_m,
+                              r_block=r_block, interpret=True)
+    car = ops.mttkrp_oriented_carry(view, factors, block_m=block_m,
+                                    r_block=r_block, interpret=True)
+    assert jnp.array_equal(ori, car), (
+        "carry path not bit-identical to one-hot merge path")
+
+    ref = core_mttkrp.mttkrp_oriented(view, factors)
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+    assert float(jnp.max(jnp.abs(car - ref))) / scale < TOL
+
+
+@pytest.mark.parametrize("layout", ["identical", "distinct",
+                                    "boundary_run", "mixed"])
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       block_m=st.sampled_from([8, 16, 64]),
+       r_block=st.sampled_from([2, 4, 8]))
+def test_mttkrp_carry_bit_identical(layout, seed, block_m, r_block):
+    rng = np.random.default_rng(seed)
+    x = _stream_tensor(_layout_counts(layout, block_m, rng), seed)
+    _assert_parity(x, block_m, r_block, seed)
+
+
+@pytest.mark.parametrize("layout", ["identical", "distinct",
+                                    "boundary_run", "mixed"])
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       block_m=st.sampled_from([8, 32]),
+       pre=st.booleans())
+def test_phi_carry_bit_identical(layout, seed, block_m, pre):
+    rng = np.random.default_rng(seed)
+    x = _stream_tensor(_layout_counts(layout, block_m, rng), seed)
+    # count data for the Poisson model
+    x = SparseTensor(DIMS, x.coords,
+                     np.abs(x.values).astype(np.float32) + 0.5)
+    at = alto.build(x, n_partitions=2)
+    view = alto.oriented_view(at, MODE)
+    factors = _factors(seed)
+    B = jnp.abs(factors[MODE]) + 0.1
+    if pre:
+        coords = alto.delinearize(at.meta.enc, view.words)
+        kw = dict(pi=core_mttkrp.krp_rows(coords, factors, MODE))
+    else:
+        kw = dict(factors=factors)
+    ori = ops.cpapr_phi_oriented(view, B, block_m=block_m,
+                                 interpret=True, **kw)
+    car = ops.cpapr_phi_oriented_carry(view, B, block_m=block_m,
+                                       interpret=True, **kw)
+    assert jnp.array_equal(ori, car), (
+        "Φ carry path not bit-identical to one-hot merge path")
+
+
+def test_carry_all_modes_of_real_tensor():
+    """End-to-end over every mode of a generic tensor (duplicates sum)."""
+    from repro.sparse import synthetic
+    x = synthetic.zipf_tensor((24, 18, 10), 1500, seed=3, count_data=True)
+    at = alto.build(x, n_partitions=4)
+    fs = [jnp.asarray(np.random.default_rng(11).standard_normal(
+        (I, 8)).astype(np.float32)) for I in x.dims]
+    for mode in range(x.ndim):
+        view = alto.oriented_view(at, mode)
+        ori = ops.mttkrp_oriented(view, fs, block_m=16, r_block=4,
+                                  interpret=True)
+        car = ops.mttkrp_oriented_carry(view, fs, block_m=16, r_block=4,
+                                        interpret=True)
+        assert jnp.array_equal(ori, car)
+
+
+def test_carry_empty_tensor_returns_zeros():
+    x = SparseTensor((9, 6, 4), np.zeros((0, 3), np.int32),
+                     np.zeros((0,), np.float32))
+    at = alto.build(x, n_partitions=4)
+    view = alto.oriented_view(at, MODE)
+    fs = _factors(0)
+    fs = [f[:I] for f, I in zip(fs, (9, 6, 4))]
+    out = ops.mttkrp_oriented_carry(view, fs, block_m=8, interpret=True)
+    assert out.shape == (9, 8)
+    assert float(jnp.max(jnp.abs(out))) == 0.0
+
+
+def test_carry_rejects_non_dividing_rank_tile():
+    from repro.sparse import synthetic
+    x = synthetic.uniform_tensor((12, 8, 6), 200, seed=0)
+    at = alto.build(x, n_partitions=2)
+    view = alto.oriented_view(at, 0)
+    fs = _factors(1, R=7)
+    fs = [f[:I] for f, I in zip(fs, (12, 8, 6))]
+    with pytest.raises(ValueError, match="r_block"):
+        ops.mttkrp_oriented_carry(view, fs, r_block=4, interpret=True)

@@ -197,24 +197,38 @@ def test_drivers_reject_mismatched_plan_rank():
 
 
 def test_plan_routes_per_forced_traversal(monkeypatch):
-    """The plan layer must dispatch to the kernel its traversal names."""
+    """The plan layer must dispatch to the kernel its traversal names.
+
+    Low-reuse modes go output-oriented; on this small tensor the stream
+    dwarfs the mode dim, so the traffic refinement picks the scratch-carry
+    kernel. Capping the VMEM budget below the carry's resident-output
+    floor must fall back to the one-hot merge kernel.
+    """
     x = synthetic.uniform_tensor((16, 12, 8), 300, seed=0)
     at = alto.build(x, n_partitions=2)
     factors = _factors(x.dims, 4)
     calls = []
-    real_rec, real_ori = ops.mttkrp, ops.mttkrp_oriented
-    monkeypatch.setattr(ops, "mttkrp",
-                        lambda *a, **k: calls.append("rec")
-                        or real_rec(*a, **k))
-    monkeypatch.setattr(ops, "mttkrp_oriented",
-                        lambda *a, **k: calls.append("ori")
-                        or real_ori(*a, **k))
-    for reuse, expect in ((10.0, "rec"), (1.5, "ori")):
+    real = {"rec": ops.mttkrp, "ori": ops.mttkrp_oriented,
+            "carry": ops.mttkrp_oriented_carry}
+    for tag, fn in real.items():
+        monkeypatch.setattr(
+            ops, {"rec": "mttkrp", "ori": "mttkrp_oriented",
+                  "carry": "mttkrp_oriented_carry"}[tag],
+            lambda *a, _tag=tag, _fn=fn, **k: calls.append(_tag)
+            or _fn(*a, **k))
+    # budget below the carry floor for mode 0 (but roomy for one-hot)
+    tight = plan_mod.oriented_carry_vmem_bytes(
+        at.meta, 0, plan_mod.MIN_BLOCK_M, 1) - 1
+    cases = ((10.0, dict(), "rec"),
+             (1.5, dict(), "carry"),
+             (1.5, dict(vmem_limit=tight), "ori"))
+    for reuse, kw, expect in cases:
         meta = dataclasses.replace(at.meta, fiber_reuse=(reuse,) * 3)
         at2 = alto.AltoTensor(meta, at.words, at.values, at.part_start,
                               at.part_end)
-        plan = plan_mod.make_plan(meta, 4, backend="pallas", interpret=True)
+        plan = plan_mod.make_plan(meta, 4, backend="pallas",
+                                  interpret=True, **kw)
         views = plan_mod.build_views(at2, plan)
         calls.clear()
         plan_mod.execute_mttkrp(plan, at2, views, factors, 0)
-        assert calls == [expect], (reuse, calls)
+        assert calls == [expect], (reuse, kw, calls)

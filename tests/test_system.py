@@ -70,7 +70,7 @@ def test_end_to_end_cp_apr_adaptive_policies():
     r = cpapr.cp_apr(at, rank=4, seed=1, track_ll=True,
                      params=cpapr.CpaprParams(k_max=8))
     assert r.pi_policy in ("pre", "otf")
-    assert set(r.traversals) <= {"recursive", "oriented"}
+    assert set(r.traversals) <= {"recursive", "oriented", "oriented_carry"}
     assert r.log_likelihoods[-1] > r.log_likelihoods[0]
 
 
