@@ -5,15 +5,24 @@ balanced partitioning. HiCOO = block-key split + lexsort + block boundary
 scan. CSF-ALL = N mode orderings, each an N-key lexsort + per-level
 prefix dedup (the SPLATT-ALL construction the paper benchmarks).
 Derived = ALTO speedup over each baseline.
+
+Device rows: `alto_device` is the jitted on-device generation
+(`alto.build_device` — same single-key-sort structure, `jax.lax.sort`),
+timed end-to-end including the meta-finalizing bounding-box transfer,
+after a warmup that absorbs the one-time trace. `view_build/*` times the
+oriented-view construction the drivers pay per output-oriented mode —
+host numpy argsort vs the device masked-extract + stable sort vs a view
+cache hit (`core.views`).
 """
 from __future__ import annotations
 
 import time
 
+import jax
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core import alto
+from repro.core import alto, views as views_mod
 from repro.sparse import baselines, synthetic
 
 
@@ -21,7 +30,7 @@ def _time(fn, iters=3):
     best = float("inf")
     for _ in range(iters):
         t0 = time.perf_counter()
-        fn()
+        jax.block_until_ready(fn())
         best = min(best, time.perf_counter() - t0)
     return best * 1e6
 
@@ -32,14 +41,35 @@ def run(quick: bool = False):
         x = synthetic.paper_like(name)
 
         t_alto = _time(lambda: alto.build(x, n_partitions=8,
-                                          compute_reuse=False))
+                                          compute_reuse=False).words)
+        dev_build = lambda: alto.build_device(            # noqa: E731
+            x, n_partitions=8, compute_reuse=False).words
+        dev_build()                                       # trace warmup
+        t_alto_dev = _time(dev_build)
         t_hicoo = _time(lambda: baselines.build_hicoo(x, block_bits=7))
         t_csf = _time(lambda: baselines.CsfAll(x))
         emit(f"format_gen/{name}/alto", t_alto, "speedup=1.00")
+        emit(f"format_gen/{name}/alto_device", t_alto_dev,
+             f"host_over_device={t_alto / t_alto_dev:.2f}")
         emit(f"format_gen/{name}/hicoo", t_hicoo,
              f"alto_speedup={t_hicoo / t_alto:.2f}")
         emit(f"format_gen/{name}/csf_all", t_csf,
              f"alto_speedup={t_csf / t_alto:.2f}")
+
+        at = alto.build_device(x, n_partitions=8, compute_reuse=False)
+        t_view = _time(lambda: alto.oriented_view(at, 0).words)
+        dev_view = lambda: alto.oriented_view_device(at, 0).words  # noqa: E731
+        dev_view()                                        # trace warmup
+        t_view_dev = _time(dev_view)
+        views_mod.cache_clear()
+        views_mod.get_view(at, 0)                         # fill the cache
+        t_view_hit = _time(lambda: views_mod.get_view(at, 0).words)
+        emit(f"view_build/{name}/host", t_view, "host_over_device=1.00")
+        emit(f"view_build/{name}/device", t_view_dev,
+             f"host_over_device={t_view / t_view_dev:.2f}")
+        emit(f"view_build/{name}/cache_hit", t_view_hit,
+             f"host_over_hit={t_view / max(t_view_hit, 1e-3):.2f}")
+        views_mod.cache_clear()
 
 
 if __name__ == "__main__":

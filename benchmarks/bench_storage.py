@@ -4,6 +4,12 @@ Exact byte counts from the REAL format builds: COO, ALTO (runtime
 multi-u32 index), HiCOO (block+offset arrays), CSF-ALL (N fiber trees,
 the paper's 'SPLATT-ALL'), the analytic Z-Morton SFC size (Eq. 3), and
 the adaptive extra cost of oriented views (only for limited-reuse modes).
+
+`alto_resident` is the honest working set next to the paper's Fig. 12
+numbers: `plan.resident_bytes` sums the arrays a CP-ALS run actually
+holds on device — the padded stream, partition boxes, and every
+materialized oriented-view copy the plan routes (which
+`AltoTensor.storage_bytes`'s per-nonzero accounting undercounts).
 """
 from __future__ import annotations
 
@@ -11,6 +17,8 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core import alto, heuristics, encoding as E
+from repro.core import plan as plan_mod
+from repro.core import views as views_mod
 from repro.sparse import baselines, synthetic
 
 
@@ -37,6 +45,12 @@ def run(quick: bool = False):
              f"bytes={alto_b};rel={alto_b / coo:.2f}")
         emit(f"storage/{name}/alto_adaptive", 0.0,
              f"bytes={alto_b + extra};rel={(alto_b + extra) / coo:.2f}")
+        plan = plan_mod.make_plan(at.meta, rank=16)
+        views = plan_mod.build_views(at, plan)
+        res = plan_mod.resident_bytes(at, views)
+        emit(f"storage/{name}/alto_resident", 0.0,
+             f"bytes={res};rel={res / coo:.2f};views={len(views)}")
+        views_mod.cache_clear()
         emit(f"storage/{name}/hicoo", 0.0,
              f"bytes={hic};rel={hic / coo:.2f}")
         emit(f"storage/{name}/zmorton_sfc", 0.0,

@@ -2,17 +2,22 @@
 # format and the adaptive parallel TD algorithms built on it.
 from repro.core.encoding import AltoEncoding, make_encoding
 from repro.core.alto import (AltoTensor, AltoMeta, OrientedView, build,
-                             oriented_view, linearize, delinearize,
+                             build_device, oriented_view,
+                             oriented_view_device, linearize, delinearize,
                              to_sparse)
-from repro.core import autotune, heuristics, mttkrp, plan, cpals, cpapr
+from repro.core import (autotune, heuristics, mttkrp, plan, cpals, cpapr,
+                        views)
 from repro.core.heuristics import Traversal
-from repro.core.plan import ExecutionPlan, ModePlan, make_plan
+from repro.core.plan import (ExecutionPlan, ModePlan, make_plan,
+                             resident_bytes)
 from repro.core.autotune import tune_plan
+from repro.core.views import get_view
 
 __all__ = [
     "AltoEncoding", "make_encoding", "AltoTensor", "AltoMeta",
-    "OrientedView", "build", "oriented_view", "linearize", "delinearize",
-    "to_sparse", "autotune", "heuristics", "mttkrp", "plan", "cpals",
-    "cpapr", "Traversal", "ExecutionPlan", "ModePlan", "make_plan",
-    "tune_plan",
+    "OrientedView", "build", "build_device", "oriented_view",
+    "oriented_view_device", "linearize", "delinearize", "to_sparse",
+    "autotune", "heuristics", "mttkrp", "plan", "cpals", "cpapr", "views",
+    "Traversal", "ExecutionPlan", "ModePlan", "make_plan",
+    "resident_bytes", "tune_plan", "get_view",
 ]

@@ -1,11 +1,26 @@
 """ALTO tensor: linearized storage, balanced partitioning, traversal views.
 
-Format generation (paper §3.1) happens host-side: linearize (bit gather),
-sort by the linearized index, then impose the balanced partitioning of §4.1.
+Format generation (paper §3.1) = linearize (bit gather), sort by the
+linearized index, then impose the balanced partitioning of §4.1. It exists
+twice, bit-identically:
+
+* ``build`` / ``oriented_view`` — host-side numpy, the parity reference;
+* ``build_device`` / ``oriented_view_device`` — `jax.lax.sort` on the
+  packed multi-word key (`encoding.sort_by_key`), jit-compatible with
+  zero host callbacks. The paper's Fig. 13 headline (ALTO generation is
+  ONE key sort) is what makes this viable on accelerators: the whole
+  ingest is a linearize + a stable sort carrying values/coords, so
+  nothing upstream of MTTKRP needs a NumPy round-trip and regeneration
+  can sit under `jit`/`shard_map` (the prerequisite for dynamic
+  relayout à la ReLATE/Dynasor).
+
 The resulting `AltoTensor` is a JAX pytree whose static aux data (encoding,
 partition intervals, fiber-reuse stats) drives *trace-time* selection of the
 paper's adaptive execution variants — the TPU analogue of the paper's
-runtime heuristics (JAX control flow must be static under jit).
+runtime heuristics (JAX control flow must be static under jit). The static
+meta (temp_rows, fiber_reuse) is data-dependent, so the device build ends
+with one tiny host transfer — the (L, N) bounding boxes and N fiber
+counts, O(L·N) scalars — while the O(nnz) stream never leaves the device.
 
 Partitioning: the sorted nonzero list is cut into L equal-size segments
 (perfect workload balance). Each segment's bounding box `T_l` (per-mode
@@ -16,6 +31,7 @@ The max interval length per mode is a *static* bound used to size the dense
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import Sequence
@@ -150,14 +166,19 @@ def fiber_reuse_stats(enc: AltoEncoding, words_np: np.ndarray,
     """Average nonzeros per fiber along each mode (paper §4.2).
 
     #fibers along mode n = #distinct coordinates with mode-n bits masked
-    out of the linearized index — ALTO makes this a cheap masked unique.
+    out of the linearized index. Counted by a masked packed-key sort +
+    adjacent-diff (`encoding.count_distinct_np`) — same result as the
+    old ``np.unique(axis=0)`` void-view scan, which was the dominant
+    ``build(compute_reuse=True)`` cost on large tensors (unique built
+    and hashed an (M, W·4)-byte view per mode; the packed sort is one
+    u64 argsort-free ``np.sort``).
     """
     masks = enc.mode_masks()           # (N, W)
     out = []
     w = words_np[:nnz]
     for n in range(enc.ndim):
         masked = w & ~masks[n][None, :]
-        n_fibers = len(np.unique(masked, axis=0)) if nnz else 1
+        n_fibers = enc_mod.count_distinct_np(masked) if nnz else 1
         out.append(float(nnz) / max(1, n_fibers))
     return tuple(out)
 
@@ -208,11 +229,15 @@ def build(x: SparseTensor, n_partitions: int = 8,
 
 
 def oriented_view(at: AltoTensor, mode: int) -> OrientedView:
-    """Build the output-oriented permutation for ``mode`` (host side)."""
+    """Build the output-oriented permutation for ``mode`` (host side).
+
+    Only the target mode's bit runs are decoded (`encoding.extract_mode`,
+    shared with the device path) — a full delinearize just to read one
+    column was the old cost here.
+    """
     words_np = np.asarray(at.words)
     values_np = np.asarray(at.values)
-    coords = enc_mod.delinearize_np(at.meta.enc, words_np)
-    rows = coords[:, mode]
+    rows = enc_mod.extract_mode(at.meta.enc, words_np, mode)
     # stable sort by row keeps ALTO order within each row (input locality)
     order = np.argsort(rows, kind="stable")
     return OrientedView(meta=at.meta, mode=mode,
@@ -220,6 +245,154 @@ def oriented_view(at: AltoTensor, mode: int) -> OrientedView:
                         words=jnp.asarray(words_np[order]),
                         values=jnp.asarray(values_np[order]),
                         perm=jnp.asarray(order.astype(np.int32)))
+
+
+# ---------------------------------------------------------------------------
+# Format generation (device side): jittable linearize -> sort -> partition
+# ---------------------------------------------------------------------------
+
+# Jitted ingest cores, keyed on static meta only (encoding, partition
+# count, nnz, dtypes) — one trace per meta, then jit's C++ fast path.
+# LRU-bounded: a streaming ingest loop sees a distinct nnz (hence key)
+# per tensor, and an unbounded map would pin one compiled executable
+# per size forever.
+_DEVICE_INGEST_FNS: "collections.OrderedDict[tuple, object]" = \
+    collections.OrderedDict()
+_DEVICE_INGEST_FNS_MAX = 128
+_DEVICE_INGEST_TRACES = {"build": 0, "view": 0}
+
+
+def _cached_ingest_fn(key: tuple, build):
+    fn = _DEVICE_INGEST_FNS.get(key)
+    if fn is None:
+        fn = _DEVICE_INGEST_FNS[key] = build()
+    else:
+        _DEVICE_INGEST_FNS.move_to_end(key)
+    while len(_DEVICE_INGEST_FNS) > _DEVICE_INGEST_FNS_MAX:
+        _DEVICE_INGEST_FNS.popitem(last=False)
+    return fn
+
+
+def device_ingest_traces() -> dict[str, int]:
+    """Trace counts of the jitted build/view cores (tests pin the
+    once-per-meta contract with this)."""
+    return dict(_DEVICE_INGEST_TRACES)
+
+
+def _build_device_fn(enc: AltoEncoding, L: int, M: int,
+                     compute_reuse: bool, val_dtype):
+    """The cached jitted device-build core for one static meta."""
+    key = ("build", enc, L, M, bool(compute_reuse),
+           jnp.dtype(val_dtype).name)
+    N, W = enc.ndim, enc.n_words
+    chunk = -(-max(M, L) // L)
+    Mp = chunk * L
+    # Host-precomputed complement masks: which index bits do NOT belong
+    # to each mode (fiber counting masks the mode out of the key).
+    not_masks = ~enc.mode_masks()                        # (N, W) u32
+
+    def core(coords, values):
+        _DEVICE_INGEST_TRACES["build"] += 1              # trace-time only
+        words = linearize(enc, coords)                   # (M, W) u32
+        ccols = [coords[:, n].astype(jnp.int32) for n in range(N)]
+        words, values, *ccols = enc_mod.sort_by_key(words, values, *ccols)
+        if Mp > M:
+            # Same padding rule as build(): value-0 copies of the last
+            # element so the tail stays inside the final bounding box.
+            pad = Mp - M
+            if M == 0:
+                pw = jnp.zeros((pad, W), jnp.uint32)
+                pc = [jnp.zeros((pad,), jnp.int32)] * N
+            else:
+                pw = jnp.broadcast_to(words[-1:], (pad, W))
+                pc = [jnp.broadcast_to(c[-1:], (pad,)) for c in ccols]
+            words = jnp.concatenate([words, pw])
+            values = jnp.concatenate(
+                [values, jnp.zeros((pad,), values.dtype)])
+            ccols = [jnp.concatenate([c, p]) for c, p in zip(ccols, pc)]
+        cc = jnp.stack(ccols, axis=-1).reshape(L, chunk, N)
+        part_start = jnp.min(cc, axis=1).astype(jnp.int32)
+        part_end = jnp.max(cc, axis=1).astype(jnp.int32)
+        if compute_reuse and M > 0:
+            fibers = jnp.stack([
+                enc_mod.count_distinct(
+                    words[:M] & jnp.asarray(not_masks[n])[None, :])
+                for n in range(N)])
+        else:
+            fibers = jnp.ones((N,), jnp.int32)
+        return words, values, part_start, part_end, fibers
+
+    return _cached_ingest_fn(key, lambda: jax.jit(core))
+
+
+def build_device(x: SparseTensor, n_partitions: int = 8,
+                 compute_reuse: bool = True) -> AltoTensor:
+    """ALTO format generation on device — `build`'s jittable twin.
+
+    linearize (jnp bit gather) → ONE stable multi-word key sort carrying
+    values + coordinate columns (`encoding.sort_by_key`) → reshaped
+    min/max partition bounding boxes, all inside a single jitted core
+    with zero host callbacks, traced once per (encoding, L, nnz, dtype).
+    Bit-identical to `build` — same element order (stable sort, so
+    duplicate linearized keys keep COO input order), same padding, same
+    static meta (the (L, N) bounding boxes and N fiber counts are the
+    only host transfer, to finalize the hashable `AltoMeta`).
+    """
+    enc = make_encoding(x.dims)
+    L = max(1, int(n_partitions))
+    M = x.nnz
+    coords = jnp.asarray(x.coords)
+    values = jnp.asarray(x.values)
+    fn = _build_device_fn(enc, L, M, compute_reuse, values.dtype)
+    words, vals, part_start, part_end, fibers = fn(coords, values)
+    ps = np.asarray(part_start)                          # (L, N): tiny
+    pe = np.asarray(part_end)
+    temp_rows = tuple(int((pe[:, n] - ps[:, n]).max()) + 1
+                      for n in range(enc.ndim))
+    if compute_reuse:
+        reuse = tuple(float(M) / max(1, int(f)) for f in np.asarray(fibers))
+    else:
+        reuse = tuple(float("nan") for _ in range(enc.ndim))
+    meta = AltoMeta(enc=enc, nnz=M, n_partitions=L, temp_rows=temp_rows,
+                    fiber_reuse=reuse)
+    return AltoTensor(meta=meta, words=words, values=vals,
+                      part_start=part_start, part_end=part_end)
+
+
+def _view_device_fn(enc: AltoEncoding, mode: int, Mp: int, val_dtype):
+    """The cached jitted oriented-view core for one static meta/mode."""
+    key = ("view", enc, mode, Mp, jnp.dtype(val_dtype).name)
+    W = enc.n_words
+
+    def core(words, values):
+        _DEVICE_INGEST_TRACES["view"] += 1               # trace-time only
+        rows = enc_mod.extract_mode(enc, words, mode)    # (Mp,) int32
+        perm0 = jnp.arange(Mp, dtype=jnp.int32)
+        cols = [words[:, w] for w in range(W)]
+        res = jax.lax.sort((rows, *cols, values, perm0), num_keys=1,
+                           is_stable=True)
+        return (res[0], jnp.stack(res[1:1 + W], axis=-1), res[1 + W],
+                res[2 + W])
+
+    return _cached_ingest_fn(key, lambda: jax.jit(core))
+
+
+def oriented_view_device(at: AltoTensor, mode: int) -> OrientedView:
+    """Output-oriented permutation for ``mode``, built on device.
+
+    Target-mode rows come from a masked bit-extract of the words
+    (`encoding.extract_mode` — no full delinearize), then ONE stable
+    `lax.sort` by row carries the words, values, and the Π permutation
+    (an iota, which IS the stable argsort). Stability keeps ALTO order
+    within each row — bit-identical to the host `oriented_view`,
+    duplicate-coordinate ties included. Jit-compatible, zero host
+    callbacks, traced once per (encoding, mode, Mp, dtype).
+    """
+    fn = _view_device_fn(at.meta.enc, mode, at.words.shape[0],
+                         at.values.dtype)
+    rows, words, values, perm = fn(at.words, at.values)
+    return OrientedView(meta=at.meta, mode=mode, rows=rows, words=words,
+                        values=values, perm=perm)
 
 
 def to_sparse(at: AltoTensor) -> SparseTensor:

@@ -52,7 +52,7 @@ import numpy as np
 from repro.core import heuristics
 from repro.core import mttkrp as core_mttkrp
 from repro.core import plan as plan_mod
-from repro.core.alto import AltoMeta, AltoTensor, delinearize, oriented_view
+from repro.core.alto import AltoMeta, AltoTensor, delinearize
 
 # v2: the ORIENTED_CARRY traversal joined the candidate space. Bumping the
 # store version makes every pre-carry store load as empty (stale winners,
@@ -407,7 +407,11 @@ def tune_plan(at: AltoTensor, rank: int, *, backend: str | None = None,
             cands = tuple(deduped)
         needs_view = (mesh is not None) or any(
             heuristics.is_oriented(c.traversal) for c in cands)
-        view = oriented_view(at, n) if needs_view else None
+        # Shared view cache: the tuner's timing views are the very views
+        # the driver will consume afterwards — built once per (tensor,
+        # mode), on device by default (core.views routing).
+        from repro.core import views as views_mod
+        view = views_mod.get_view(at, n) if needs_view else None
         views = {n: view} if view is not None else {}
         if objective == "phi":
             B = jnp.abs(factors[n]) + jnp.float32(0.1)

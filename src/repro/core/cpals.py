@@ -58,7 +58,9 @@ def build_views(at: AltoTensor,
                 plan: plan_mod.ExecutionPlan | None = None
                 ) -> dict[int, OrientedView]:
     """Oriented views only for modes the plan routes that way
-    (keeps the single-copy property for high-reuse tensors)."""
+    (keeps the single-copy property for high-reuse tensors). Served
+    from the process-wide view cache (`core.views`): device-built by
+    default, one build per (tensor, mode) shared across drivers."""
     if plan is None:
         plan = plan_mod.make_plan(at.meta, rank=1)  # traversal is rank-free
     return plan_mod.build_views(at, plan)

@@ -149,7 +149,11 @@ def cp_apr(at: AltoTensor, rank: int, params: CpaprParams | None = None,
 
     All kernel routing (traversal per mode, Π policy, jnp vs Pallas) comes
     from ``plan``; the default plan resolves the paper heuristics with the
-    reference backend on CPU and the Pallas backend on TPU. ``tune``
+    reference backend on CPU and the Pallas backend on TPU. Oriented
+    views come from the process-wide cache (`core.views` via
+    `plan.build_views`): device-built by default, shared with CP-ALS and
+    the autotuner — a tensor decomposed by both drivers materializes
+    each mode's view once. ``tune``
     ("off"|"auto"|"force") swaps the analytic plan for a measured one
     from the autotuner's persistent store (`core.autotune`), timing
     candidates here if the store misses — the tensor data is in hand.

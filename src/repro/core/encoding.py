@@ -18,12 +18,28 @@ scatter", Fig. 6b) are run-compressed: consecutive index bits that come from
 consecutive bits of the same mode and land in the same word are moved with a
 single shift+mask, so the op count is O(#runs) ≤ O(total_bits) and in
 practice ~N per word.
+
+Two sorting surfaces live here, one per placement:
+
+* host (`sort_key_np`, `count_distinct_np`) — numpy, the parity
+  reference used by `alto.build` / `alto.fiber_reuse_stats`;
+* device (`sort_by_key`, `count_distinct`) — `jax.lax.sort` on the same
+  packed multi-word key, stable, jit-compatible, carrying arbitrary
+  value/coordinate operands through the permutation. This is the paper's
+  Fig. 13 claim made jittable: format generation is ONE key sort, so it
+  can run on the accelerator inside a traced program.
+
+Both orderings are bit-identical (ascending multi-word unsigned key,
+ties by original position) — `alto.build_device` relies on that to be a
+drop-in replacement for the host build.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 WORD_BITS = 32
@@ -211,6 +227,128 @@ def sort_key_np(words: np.ndarray) -> np.ndarray:
     # np.lexsort: last key is primary -> most significant word last.
     keys = tuple(words[:, w] for w in range(W))
     return np.lexsort(keys)
+
+
+def extract_mode(enc: AltoEncoding, words, mode: int):
+    """Read ONE mode's coordinate out of the linearized index words.
+
+    Only the target mode's bit runs are touched — no full delinearize —
+    so the cost is O(#runs of that mode) shifts/masks instead of
+    O(#runs total). Pure ufunc arithmetic: ``words`` may be a numpy
+    array (host `alto.oriented_view`) or a jax array
+    (`alto.oriented_view_device`) of shape (..., n_words) u32; returns
+    (...,) int32. The single shared implementation of the host and
+    device row-extraction paths.
+    """
+    out = words[..., 0] & np.uint32(0)
+    for r in enc.runs:
+        if r.mode != mode:
+            continue
+        chunk = (words[..., r.word] >> np.uint32(r.dst_shift)) \
+            & np.uint32(r.mask)
+        out = out | (chunk << np.uint32(r.src_shift))
+    return out.astype(np.int32)
+
+
+def _pack_u64_np(words: np.ndarray) -> np.ndarray:
+    """(M, W<=2) u32 -> (M,) u64 packed key (host side; numpy has u64)."""
+    key = words[:, 0].astype(np.uint64)
+    if words.shape[1] > 1:
+        key |= words[:, 1].astype(np.uint64) << np.uint64(32)
+    return key
+
+
+def count_distinct_np(words: np.ndarray) -> int:
+    """Distinct rows of an (M, W) u32 word array: packed-key sort +
+    adjacent-diff count.
+
+    Replaces the ``np.unique(axis=0)`` void-view scan that dominated
+    ``build(compute_reuse=True)``: ≤2 words collapse to ONE u64 sort
+    (the same single-packed-key trick as `sort_key_np`), 4 words to a
+    two-u64-key lexsort. Counting needs no stability, only ordering.
+    """
+    M, W = words.shape
+    if M == 0:
+        return 0
+    if W <= 2:
+        key = np.sort(_pack_u64_np(words))
+        return 1 + int(np.count_nonzero(key[1:] != key[:-1]))
+    lo = _pack_u64_np(words[:, :2])
+    hi = _pack_u64_np(words[:, 2:])
+    order = np.lexsort((lo, hi))
+    lo, hi = lo[order], hi[order]
+    return 1 + int(np.count_nonzero(
+        (lo[1:] != lo[:-1]) | (hi[1:] != hi[:-1])))
+
+
+# ---------------------------------------------------------------------------
+# Device-side (jax.lax.sort) key packing + multi-word stable sort.
+# ---------------------------------------------------------------------------
+
+def pack_key(words: jnp.ndarray):
+    """Packed single-lane device sort key, or None when unpackable.
+
+    One word is its own key; two words pack into u64 only when 64-bit
+    lanes exist — ``jax_enable_x64`` on AND a non-TPU backend (TPUs have
+    no native 64-bit integer datapath regardless of the x64 flag, and
+    with x64 off jnp silently truncates u64). Callers fall back to the
+    multi-key paths of :func:`sort_by_key` on None.
+    """
+    W = words.shape[-1]
+    if W == 1:
+        return words[..., 0]
+    if (W == 2 and jax.config.jax_enable_x64
+            and jax.default_backend() != "tpu"):
+        return (words[..., 1].astype(jnp.uint64) << jnp.uint64(32)) \
+            | words[..., 0].astype(jnp.uint64)
+    return None
+
+
+def sort_by_key(words: jnp.ndarray, *operands: jnp.ndarray):
+    """Stable ascending device sort by the multi-word ALTO key.
+
+    ``words`` is (M, W) u32; ``operands`` are (M,) arrays carried through
+    the same permutation (values, coordinate columns, iota for an
+    argsort). Returns ``(sorted_words, *sorted_operands)``.
+
+    Strategy by width: ≤2 words sort ONCE on the packed key
+    (:func:`pack_key`; without x64 two words become one two-key
+    lexicographic `lax.sort`, MSW primary — same order, no 64-bit
+    lanes); beyond that, LSW→MSW stable passes (word-wise LSD radix —
+    each pass is a stable single-key sort, so the composition orders by
+    the most-significant word with ties resolved by lower words, exactly
+    `sort_key_np`'s ``np.lexsort``). Every path is stable, so duplicate
+    full keys keep their input order — the tie rule the oriented-view
+    and build parity contracts depend on.
+    """
+    M, W = words.shape
+    cols = [words[:, w] for w in range(W)]
+    ops = list(operands)
+    key = pack_key(words)
+    if key is not None:
+        res = jax.lax.sort((key, *cols, *ops), num_keys=1, is_stable=True)
+        srt = list(res[1:])
+    elif W == 2:
+        res = jax.lax.sort((cols[1], cols[0], *ops), num_keys=2,
+                           is_stable=True)
+        srt = [res[1], res[0], *res[2:]]
+    else:
+        srt = cols + ops
+        for w in range(W):                      # LSW -> MSW stable passes
+            rest = srt[:w] + srt[w + 1:]
+            res = jax.lax.sort((srt[w], *rest), num_keys=1, is_stable=True)
+            srt = list(res[1:w + 1]) + [res[0]] + list(res[w + 1:])
+    return (jnp.stack(srt[:W], axis=-1), *srt[W:])
+
+
+def count_distinct(words: jnp.ndarray) -> jnp.ndarray:
+    """Distinct rows of an (M, W) u32 array, on device (sort + adjacent
+    diff — the jittable sibling of :func:`count_distinct_np`)."""
+    if words.shape[0] == 0:
+        return jnp.asarray(0, jnp.int32)
+    srt = sort_by_key(words)[0]
+    neq = jnp.any(srt[1:] != srt[:-1], axis=-1)
+    return jnp.asarray(1, jnp.int32) + jnp.sum(neq, dtype=jnp.int32)
 
 
 def compare_le_np(words: np.ndarray, bound: np.ndarray) -> np.ndarray:

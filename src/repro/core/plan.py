@@ -672,15 +672,43 @@ def plan_for(at: AltoTensor, rank: int, **kwargs) -> ExecutionPlan:
     return make_plan(at.meta, rank, **kwargs)
 
 
-def build_views(at: AltoTensor, plan: ExecutionPlan
-                ) -> dict[int, OrientedView]:
+def build_views(at: AltoTensor, plan: ExecutionPlan,
+                route: str | None = None) -> dict[int, OrientedView]:
     """Oriented-traversal copies for exactly the modes the plan routes
     output-oriented — either variant, one-hot merge or scratch carry,
     both consume the same row-sorted view (preserves the single-copy
-    property elsewhere)."""
-    from repro.core.alto import oriented_view
-    return {m.mode: oriented_view(at, m.mode) for m in plan.modes
-            if heuristics.is_oriented(m.traversal)}
+    property elsewhere).
+
+    Routed through the unified view cache (`core.views`): built once per
+    (tensor fingerprint, mode) per process and shared by every driver;
+    ``route`` picks the device (`alto.oriented_view_device`, default) or
+    host builder — bit-identical, so the cache ignores the route.
+    """
+    from repro.core import views as views_mod
+    return views_mod.build_views(at, plan, route=route)
+
+
+def resident_bytes(at: AltoTensor,
+                   views: dict[int, OrientedView] | None = None) -> int:
+    """Device-resident bytes a decomposition actually holds.
+
+    `AltoTensor.storage_bytes` is the paper's Fig. 12 accounting — index
+    + value words per *real* nonzero — which undercounts the working
+    set: CP-ALS/CP-APR also hold the padded tail, the partition boxes,
+    and one full oriented copy (rows/words/values/perm) per
+    output-oriented mode. This sums the actual materialized arrays, so
+    `bench_storage` can report the honest footprint next to the paper
+    numbers.
+    """
+    def nbytes(a) -> int:
+        return int(a.size) * a.dtype.itemsize
+
+    total = (nbytes(at.words) + nbytes(at.values)
+             + nbytes(at.part_start) + nbytes(at.part_end))
+    for v in (views or {}).values():
+        total += (nbytes(v.rows) + nbytes(v.words) + nbytes(v.values)
+                  + nbytes(v.perm))
+    return total
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,177 @@
+"""Unified, cached oriented-view pipeline: (tensor, mode) -> OrientedView.
+
+Every consumer of the oriented traversal — `cp_als`, `cp_apr`, the
+autotuner, the distributed drivers — needs the same row-sorted copy of
+the stream per (tensor, mode), and before this module each of them
+rebuilt it per call (a host argsort + full host→device copy each time).
+This is the single materialization point: views are built once per
+(tensor fingerprint, mode) per process, routed host-vs-device, and every
+caller shares the cached arrays (`plan.build_views` routes through here).
+
+* **Routing** — ``route="device"`` (default) builds with
+  `alto.oriented_view_device` (masked bit-extract + one stable
+  `lax.sort`, jit-compiled, no host round-trip); ``route="host"`` keeps
+  the numpy parity reference. The two are bit-identical (tier-1
+  parity-tested), so the cache never keys on the route. The process
+  default comes from ``$REPRO_INGEST`` ("device" | "host").
+
+* **Fingerprinting** — the cache key is content-based, not object-based:
+  the hashable `AltoMeta` plus two u32 mixing checksums over the word
+  stream and the values (bitcast in their NATIVE dtype, so float64
+  tensors differing below float32 resolution cannot alias), reduced on
+  device and memoized on the tensor object. Two `AltoTensor`s holding
+  the same built data (e.g. rebuilt across driver calls) therefore share
+  views, while any change to the data re-keys. The digest transfer is
+  two scalars — negligible next to the O(nnz) copies it deduplicates.
+
+* **Accounting & bounds** — hits/misses/builds are counted
+  (`cache_stats`) so the "one build per (tensor, mode) per process"
+  contract is assertable; a lock keeps that contract under concurrent
+  drivers. The cache is LRU-bounded twice over — by entry count
+  (``$REPRO_VIEW_CACHE_SIZE``, default 64) and by approximate resident
+  bytes (``$REPRO_VIEW_CACHE_BYTES``, default 2 GiB) — because one view
+  is a full O(nnz) copy and a count bound alone would let a sweep over
+  large tensors pin multiples of device memory. Dropping a tensor does
+  not drop its cached views until they age out; call
+  :func:`invalidate` to release them eagerly.
+"""
+from __future__ import annotations
+
+import collections
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import alto
+from repro.core.alto import AltoTensor, OrientedView
+
+DEFAULT_CACHE_SIZE = 64
+DEFAULT_CACHE_BYTES = 2 * 1024 ** 3
+
+_CACHE: "collections.OrderedDict[tuple, OrientedView]" = \
+    collections.OrderedDict()
+_CACHE_BYTES: dict[tuple, int] = {}
+_STATS = {"hits": 0, "misses": 0, "builds": 0}
+_LOCK = threading.Lock()
+
+_FP_ATTR = "_ingest_fingerprint"
+
+
+def default_route() -> str:
+    """Process-wide ingest routing: ``$REPRO_INGEST`` or "device"."""
+    route = os.environ.get("REPRO_INGEST", "device")
+    if route not in ("device", "host"):
+        raise ValueError(f"REPRO_INGEST={route!r}: expected device|host")
+    return route
+
+
+def _limits() -> tuple[int, int]:
+    return (int(os.environ.get("REPRO_VIEW_CACHE_SIZE",
+                               DEFAULT_CACHE_SIZE)),
+            int(os.environ.get("REPRO_VIEW_CACHE_BYTES",
+                               DEFAULT_CACHE_BYTES)))
+
+
+def _view_bytes(v: OrientedView) -> int:
+    return sum(int(a.size) * a.dtype.itemsize
+               for a in (v.rows, v.words, v.values, v.perm))
+
+
+def _u32_mix(x: jnp.ndarray, salt: int) -> jnp.ndarray:
+    """Order-sensitive u32 checksum (wrapping arithmetic, eager jnp)."""
+    idx = jnp.arange(x.shape[0], dtype=jnp.uint32)
+    mixed = (x ^ (idx * jnp.uint32(0x9E3779B1))) * jnp.uint32(salt)
+    return jnp.sum(mixed, dtype=jnp.uint32)
+
+
+def fingerprint(at: AltoTensor) -> tuple:
+    """Content fingerprint of a built tensor, memoized on the object.
+
+    Hashable: (meta, padded length, words checksum, values checksum).
+    `AltoMeta` already pins shape/nnz/partitioning; the checksums pin the
+    actual stream content — values bitcast in their native width, so no
+    precision is discarded before hashing — and distinct tensors with
+    identical meta cannot alias each other's views.
+    """
+    fp = getattr(at, _FP_ATTR, None)
+    if fp is None:
+        w = _u32_mix(at.words.ravel().astype(jnp.uint32), 0x85EBCA6B)
+        # f32 -> (M,) u32; f64 -> (M, 2) u32: ravel covers both widths.
+        v_bits = jax.lax.bitcast_convert_type(at.values, jnp.uint32)
+        v = _u32_mix(v_bits.ravel(), 0xC2B2AE35)
+        fp = (at.meta, at.words.shape[0], int(w), int(v))
+        at._ingest_fingerprint = fp
+    return fp
+
+
+def get_view(at: AltoTensor, mode: int,
+             route: str | None = None) -> OrientedView:
+    """The oriented view for ``(at, mode)``: cached, built on miss.
+
+    Thread-safe: concurrent misses on the same key build once (the
+    build runs under the lock — rare by construction, and duplicate
+    O(nnz) device allocations would be worse than brief serialization).
+    """
+    key = (fingerprint(at), int(mode))
+    with _LOCK:
+        view = _CACHE.get(key)
+        if view is not None:
+            _STATS["hits"] += 1
+            _CACHE.move_to_end(key)
+            return view
+        _STATS["misses"] += 1
+        _STATS["builds"] += 1
+        route = route or default_route()
+        view = (alto.oriented_view_device(at, mode) if route == "device"
+                else alto.oriented_view(at, mode))
+        _CACHE[key] = view
+        _CACHE_BYTES[key] = _view_bytes(view)
+        max_entries, max_bytes = _limits()
+        while len(_CACHE) > max(1, max_entries) or (
+                len(_CACHE) > 1
+                and sum(_CACHE_BYTES.values()) > max_bytes):
+            old, _ = _CACHE.popitem(last=False)
+            _CACHE_BYTES.pop(old, None)
+        return view
+
+
+def build_views(at: AltoTensor, plan,
+                route: str | None = None) -> dict[int, OrientedView]:
+    """Cached views for exactly the modes ``plan`` routes oriented
+    (either variant — one-hot merge or scratch carry — consumes the same
+    row-sorted view)."""
+    from repro.core import heuristics
+    return {m.mode: get_view(at, m.mode, route=route)
+            for m in plan.modes if heuristics.is_oriented(m.traversal)}
+
+
+def invalidate(at: AltoTensor) -> int:
+    """Drop every cached view of ``at``; returns how many were evicted.
+    For services that release a large tensor and want its O(nnz) view
+    copies freed before LRU aging would get to them."""
+    fp = fingerprint(at)
+    with _LOCK:
+        dead = [k for k in _CACHE if k[0] == fp]
+        for k in dead:
+            del _CACHE[k]
+            _CACHE_BYTES.pop(k, None)
+    return len(dead)
+
+
+def cache_stats() -> dict[str, int]:
+    """Hit/miss/build counters plus current size (copies, not live)."""
+    with _LOCK:
+        out = dict(_STATS)
+        out["size"] = len(_CACHE)
+        out["bytes"] = sum(_CACHE_BYTES.values())
+    return out
+
+
+def cache_clear() -> None:
+    with _LOCK:
+        _CACHE.clear()
+        _CACHE_BYTES.clear()
+        for k in _STATS:
+            _STATS[k] = 0

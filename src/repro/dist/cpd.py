@@ -2,11 +2,15 @@
 
 ALTO's linearized nonzero stream is "streamed from memory and amenable to
 parallel execution"; this module is that claim made literal on a device
-mesh. The oriented view (`core.alto.oriented_view`) sorts nonzeros by the
-target-mode row, and the sharding is the simplest one that preserves every
-single-device invariant: cut the sorted stream into per-device
-**contiguous, equal-size slices** (`shard_map` over the mesh's first
-axis). Each device runs the *existing* single-device oriented segment
+mesh. The oriented view — device-built and process-cached by default
+(`core.views`, backed by `core.alto.oriented_view_device`) — sorts
+nonzeros by the target-mode row, and the sharding is the simplest one that
+preserves every single-device invariant: cut the sorted stream into
+per-device **contiguous, equal-size slices** (`shard_map` over the mesh's
+first axis). The shard-local row-range slices are carved by `shard_map`'s
+input specs from the device-resident view arrays, so from COO ingest to
+psum merge nothing round-trips through the host: build_device → cached
+view → in-jit padding → per-device slice. Each device runs the *existing* single-device oriented segment
 reduction on its slice — reference jnp `segment_sum` or the Pallas kernel
 plus `kernels.ops.segment_merge`, exactly as the plan dictates — into a
 full-width dense ``(I_n, R)`` output, and the outputs are combined with
@@ -282,8 +286,12 @@ def distributed_cp_als(x: SparseTensor | AltoTensor, rank: int, mesh, *,
     if isinstance(x, AltoTensor):
         at = x
     else:
+        # Device ingest: format generation is a jitted sort on device,
+        # and the oriented views the sharded merge consumes come from
+        # the shared cache (cpals' plan_mod.build_views) — no host
+        # argsort or host→device stream copy anywhere in the chain.
         D = int(mesh.shape[mesh.axis_names[0]])
-        at = alto.build(x, n_partitions=n_partitions or D)
+        at = alto.build_device(x, n_partitions=n_partitions or D)
     plan = plan_mod.make_plan(at.meta, rank, backend=backend,
                               interpret=interpret, mesh=mesh,
                               tune=tune, at=at)
