@@ -1,0 +1,81 @@
+"""Multi-tenant serving throughput: shape-class bucketing vs solo runs.
+
+Rows (docs/serving.md):
+
+* ``serving/tenants_per_s`` — tenants decomposed per second of bucket
+  busy time through the batched layer;
+* ``serving/traces_per_bucket`` — batched-sweep jit traces divided by
+  buckets run (the bucketing payoff: well under 1 once a class is warm,
+  asserted <= 1.0 here since every bucket of a class reuses one trace);
+* ``serving/latency_p50`` / ``serving/latency_p99`` — submit-to-result
+  wall clock per tenant (µs), bucket-mates included;
+* ``serving/solo_us_per_tenant`` — the unbatched baseline: the same
+  tenants through individual `cp_als` calls, one compile each.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import alto, batched, cpals
+from repro.launch.serve_cpd import CpdService
+from repro.sparse.synthetic import uniform_tensor
+
+
+def _tenants(n: int, quick: bool):
+    """n tenants over a few pow2 envelopes -> a handful of classes."""
+    scale = 1 if quick else 2
+    shapes = [(9, 7, 5), (12, 6, 8), (16, 8, 8), (14, 8, 7)]
+    rng = np.random.default_rng(0)
+    out = []
+    for t in range(n):
+        dims = tuple(d * scale for d in shapes[t % len(shapes)])
+        nnz = int(rng.integers(70, 128)) * scale
+        out.append(uniform_tensor(dims, nnz, seed=t))
+    return out
+
+def run(quick: bool = False) -> None:
+    n_tenants = 8 if quick else 16
+    rank, iters = 4, 4
+    xs = _tenants(n_tenants, quick)
+
+    sweeps0 = batched.sweep_traces()["als"]
+    svc = CpdService(rank, capacity=4, n_iters=iters, tol=0.0,
+                     tune="off", backend="reference")
+    for i, x in enumerate(xs):
+        svc.submit(x, seed=i)
+    t0 = time.perf_counter()
+    responses = svc.process()
+    wall = time.perf_counter() - t0
+    stats = svc.stats()
+    assert len(responses) == n_tenants
+
+    buckets = stats["buckets_run"]
+    traces = batched.sweep_traces()["als"] - sweeps0
+    traces_per_bucket = traces / max(1, buckets)
+    # The tentpole contract: trace count bounded by bucket count (and by
+    # the class count — strictly fewer once any class runs two buckets).
+    assert traces <= buckets, (traces, buckets)
+    assert traces <= stats["shape_classes"], (traces, stats)
+
+    emit("serving/tenants_per_s", 1e6 / max(stats["tenants_per_s"], 1e-9),
+         f"{stats['tenants_per_s']:.2f}/s")
+    emit("serving/traces_per_bucket", traces_per_bucket * 1e6,
+         f"{traces}tr/{buckets}bk")
+    emit("serving/latency_p50", stats["latency_p50_s"] * 1e6,
+         f"{n_tenants}tenants")
+    emit("serving/latency_p99", stats["latency_p99_s"] * 1e6,
+         f"cap{svc.capacity}")
+    emit("serving/batched_wall_us_per_tenant", wall * 1e6 / n_tenants,
+         f"{stats['shape_classes']}classes")
+
+    # Unbatched baseline: same tenants, one driver call (and one meta ->
+    # one compile cascade) each.
+    t0 = time.perf_counter()
+    for x in xs:
+        cpals.cp_als(alto.build(x), rank, n_iters=iters, tol=0.0)
+    solo_wall = time.perf_counter() - t0
+    emit("serving/solo_us_per_tenant", solo_wall * 1e6 / n_tenants,
+         f"speedup={solo_wall / max(wall, 1e-9):.2f}x")

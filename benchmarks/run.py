@@ -12,13 +12,13 @@ def main() -> None:
                     help="smaller tensors / fewer cases")
     ap.add_argument("--only", default="",
                     help="comma list: mttkrp,cpapr,storage,format,"
-                         "kernels,roofline,dist,autotune,carry")
+                         "kernels,roofline,dist,autotune,carry,serving")
     args = ap.parse_args()
 
     from benchmarks import (bench_autotune, bench_cpapr, bench_dist,
                             bench_format_generation, bench_kernels,
                             bench_mttkrp, bench_mttkrp_formats,
-                            bench_roofline, bench_storage)
+                            bench_roofline, bench_serving, bench_storage)
 
     suites = {
         "mttkrp": bench_mttkrp_formats.run,      # paper Fig. 9
@@ -30,6 +30,7 @@ def main() -> None:
         "dist": bench_dist.run,                  # docs/distributed.md
         "autotune": bench_autotune.run,          # docs/autotuning.md
         "carry": bench_mttkrp.run,               # one-hot vs scratch-carry
+        "serving": bench_serving.run,            # docs/serving.md
     }
     wanted = [s for s in args.only.split(",") if s] or list(suites)
 

@@ -5,19 +5,24 @@ from repro.core.alto import (AltoTensor, AltoMeta, OrientedView, build,
                              build_device, oriented_view,
                              oriented_view_device, linearize, delinearize,
                              to_sparse)
-from repro.core import (autotune, heuristics, mttkrp, plan, cpals, cpapr,
-                        views)
+from repro.core import (autotune, batched, heuristics, mttkrp, plan, cpals,
+                        cpapr, shapeclass, views)
 from repro.core.heuristics import Traversal
 from repro.core.plan import (ExecutionPlan, ModePlan, make_plan,
-                             resident_bytes)
+                             make_class_plan, resident_bytes)
 from repro.core.autotune import tune_plan
+from repro.core.shapeclass import ShapeClass, classify, pad_to_class
+from repro.core.batched import batched_cp_als, batched_cp_apr
 from repro.core.views import get_view
 
 __all__ = [
     "AltoEncoding", "make_encoding", "AltoTensor", "AltoMeta",
     "OrientedView", "build", "build_device", "oriented_view",
     "oriented_view_device", "linearize", "delinearize", "to_sparse",
-    "autotune", "heuristics", "mttkrp", "plan", "cpals", "cpapr", "views",
+    "autotune", "batched", "heuristics", "mttkrp", "plan", "cpals",
+    "cpapr", "shapeclass", "views",
     "Traversal", "ExecutionPlan", "ModePlan", "make_plan",
-    "resident_bytes", "tune_plan", "get_view",
+    "make_class_plan", "resident_bytes", "tune_plan",
+    "ShapeClass", "classify", "pad_to_class",
+    "batched_cp_als", "batched_cp_apr", "get_view",
 ]

@@ -34,6 +34,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import threading
 from typing import Sequence
 
 import jax
@@ -260,23 +261,29 @@ _DEVICE_INGEST_FNS: "collections.OrderedDict[tuple, object]" = \
     collections.OrderedDict()
 _DEVICE_INGEST_FNS_MAX = 128
 _DEVICE_INGEST_TRACES = {"build": 0, "view": 0}
+# Concurrent serving drivers ingest in parallel; the OrderedDict
+# move_to_end/popitem pair is not atomic, so guard all mutations.
+_DEVICE_INGEST_LOCK = threading.Lock()
 
 
 def _cached_ingest_fn(key: tuple, build):
-    fn = _DEVICE_INGEST_FNS.get(key)
-    if fn is None:
-        fn = _DEVICE_INGEST_FNS[key] = build()
-    else:
-        _DEVICE_INGEST_FNS.move_to_end(key)
-    while len(_DEVICE_INGEST_FNS) > _DEVICE_INGEST_FNS_MAX:
-        _DEVICE_INGEST_FNS.popitem(last=False)
-    return fn
+    with _DEVICE_INGEST_LOCK:
+        fn = _DEVICE_INGEST_FNS.get(key)
+        if fn is None:
+            fn = _DEVICE_INGEST_FNS[key] = build()
+        else:
+            _DEVICE_INGEST_FNS.move_to_end(key)
+        while len(_DEVICE_INGEST_FNS) > _DEVICE_INGEST_FNS_MAX:
+            _DEVICE_INGEST_FNS.popitem(last=False)
+        return fn
 
 
 def device_ingest_traces() -> dict[str, int]:
     """Trace counts of the jitted build/view cores (tests pin the
-    once-per-meta contract with this)."""
-    return dict(_DEVICE_INGEST_TRACES)
+    once-per-meta contract with this; the serving layer pins its
+    one-trace-per-shape-class contract with before/after deltas)."""
+    with _DEVICE_INGEST_LOCK:
+        return dict(_DEVICE_INGEST_TRACES)
 
 
 def _build_device_fn(enc: AltoEncoding, L: int, M: int,

@@ -120,6 +120,20 @@ def plan_key(meta: AltoMeta, rank: int, backend: str, *,
     return hashlib.sha256(blob.encode()).hexdigest()[:32]
 
 
+def class_plan_key(sc, backend: str, **kwargs) -> str:
+    """Store key for a shape class (`core.shapeclass.ShapeClass`).
+
+    Delegates to `plan_key` over the class's canonical meta — a pure
+    function of the class, with no data-dependent fields — so every
+    tenant the class admits resolves to the SAME store entry: the class
+    is measured once, then every subsequent tenant's dispatch is a
+    zero-timing-run store hit (the serving layer's warm start).
+    """
+    from repro.core import shapeclass
+    return plan_key(shapeclass.canonical_meta(sc), sc.rank, backend,
+                    **kwargs)
+
+
 # ---------------------------------------------------------------------------
 # The on-disk store (versioned JSON; corrupt/stale files are ignored)
 # ---------------------------------------------------------------------------

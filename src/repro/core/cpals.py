@@ -101,6 +101,10 @@ def _sweep(plan, at: AltoTensor, views, factors, lam, gram_fn=None):
 
 def _fit_host(M_last, factors, lam, normX2: float) -> float:
     """Kolda–Bader fit from sweep-consistent state, in host float64."""
+    if normX2 == 0.0:
+        # All-zero (or empty) tensor: the zero model is exact. Without
+        # this the fit divides by sqrt(0) and reports NaN forever.
+        return 1.0
     n = len(factors) - 1
     fs = [np.asarray(A, np.float64) for A in factors]
     lam64 = np.asarray(lam, np.float64)
@@ -128,6 +132,16 @@ def cp_als(at: AltoTensor, rank: int, n_iters: int = 50, tol: float = 1e-5,
     elif plan.rank != rank:
         raise ValueError(f"plan was built for rank {plan.rank}, "
                          f"cp_als called with rank {rank}")
+    if at.meta.nnz == 0:
+        # Degenerate tenant input (a public serving endpoint WILL see
+        # these): the zero model is the exact decomposition. Well-defined
+        # result — zero factors, zero weights, fit 1.0 — not an exception
+        # or a NaN fit trajectory.
+        dtype = at.values.dtype
+        return CpalsResult(lam=jnp.zeros((rank,), dtype),
+                           factors=[jnp.zeros((I, rank), dtype)
+                                    for I in at.dims],
+                           fits=[1.0], n_iters=0, plan=plan)
     if factors is None:
         factors = init_factors(at.dims, rank, seed=seed,
                                dtype=at.values.dtype)

@@ -162,6 +162,18 @@ def cp_apr(at: AltoTensor, rank: int, params: CpaprParams | None = None,
     """
     p = params or CpaprParams()
     N = len(at.dims)
+    if at.meta.nnz == 0:
+        # Degenerate tenant input: the zero model maximizes the Poisson
+        # likelihood of an all-zero tensor (λ → 0). Return a well-defined
+        # converged result instead of iterating on NaNs.
+        dtype = at.values.dtype
+        return CpaprResult(
+            lam=jnp.zeros((rank,), dtype),
+            factors=[jnp.zeros((I, rank), dtype) for I in at.dims],
+            kkt_violations=[0.0], log_likelihoods=[], n_outer=0,
+            n_inner_total=0, pi_policy=pi_policy or "otf",
+            traversals=["oriented"] * N,
+            plan=plan)
     total = float(jnp.sum(at.values))
     lam, factors = init_factors(at.dims, rank, seed=seed, total=total,
                                 dtype=at.values.dtype)

@@ -672,6 +672,22 @@ def plan_for(at: AltoTensor, rank: int, **kwargs) -> ExecutionPlan:
     return make_plan(at.meta, rank, **kwargs)
 
 
+def make_class_plan(sc, **kwargs) -> ExecutionPlan:
+    """`make_plan` for a shape class (`core.shapeclass.ShapeClass`).
+
+    The plan resolves against the class's canonical meta, so it is
+    CLASS-keyed: every tenant the class admits executes (and, under
+    ``tune=``, autotunes/stores — see `autotune.class_plan_key`) through
+    this one plan. The canonical meta's ``temp_rows`` are the padded
+    class dims, so the VMEM models size scratch for the worst member —
+    conservative by construction, never undersized for any tenant.
+    A tensor passed via ``at=`` must already carry the canonical meta
+    (`shapeclass.canonicalize_tensor`) or the tuner will reject it.
+    """
+    from repro.core import shapeclass
+    return make_plan(shapeclass.canonical_meta(sc), sc.rank, **kwargs)
+
+
 def build_views(at: AltoTensor, plan: ExecutionPlan,
                 route: str | None = None) -> dict[int, OrientedView]:
     """Oriented-traversal copies for exactly the modes the plan routes

@@ -1,0 +1,156 @@
+"""Shape-class bucketing: collapse tenant tensors onto a few executables.
+
+The production workload the ROADMAP targets is not one giant tensor — it
+is thousands of small-to-medium decompositions in flight at once
+(per-user / per-cohort anomaly streams, paper §1). Today every tenant's
+`AltoMeta` is its own jit trace: distinct dims pick distinct encodings,
+distinct nnz pick distinct stream lengths, and the data-dependent meta
+fields (``temp_rows``, ``fiber_reuse``) differ even between tensors of
+identical shape — so a thousand tenants means a thousand compiles.
+
+A :class:`ShapeClass` deletes all three sources of trace divergence:
+
+* **dims** round up per mode to the next power of two. Embedding a
+  tensor in larger mode extents is exact — coordinates are unchanged,
+  the extra factor rows receive no contributions and (zero-initialized)
+  stay exactly zero through every CP-ALS/CP-APR update, so they never
+  perturb Gram matrices, λ, or the fit.
+* **nnz** rounds up to the next power of two (floored at the partition
+  count) and the COO stream is padded to it with the SAME rule the
+  kernels already rely on (`ops.pad_sorted_stream`): replicated copies
+  of the final element carrying **zero values**, which contribute
+  nothing to any reduction. An empty stream pads with the all-zero
+  coordinate.
+* **meta** canonicalizes: :func:`canonical_meta` builds the one
+  `AltoMeta` every member of the class shares — ``temp_rows`` bound by
+  the padded class dims (the only bound that holds for every member:
+  a partition's mode interval can span the whole extent) and
+  ``fiber_reuse`` fixed at the no-reuse worst case 1.0, which routes
+  every mode to the output-oriented family (the batchable traversal).
+
+The canonical meta is a pure function of the class, so plans built from
+it (`plan.make_class_plan`) are **class-keyed**: one compiled executable
+and one autotuner plan-store entry (`autotune.class_plan_key`) serve
+every tenant the class ever admits. The padding-overhead tradeoff is the
+price — a tenant just past a power-of-two boundary computes on up to 2×
+its nonzeros (see docs/known-issues.md) — bought against one trace per
+class instead of one per tenant.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.alto import AltoMeta, AltoTensor
+from repro.core.encoding import make_encoding
+from repro.sparse.tensor import SparseTensor
+
+DEFAULT_PARTITIONS = 8
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeClass:
+    """Hashable bucket descriptor: everything a compiled executable keys on.
+
+    ``dims`` and ``nnz`` are the PADDED class values (per-mode pow2
+    extents; pow2 stream length, a multiple of ``n_partitions``), never a
+    member tensor's real ones.
+    """
+    dims: tuple[int, ...]
+    nnz: int
+    n_partitions: int
+    rank: int
+    dtype: str = "float32"
+
+    @property
+    def order(self) -> int:
+        return len(self.dims)
+
+    def admits(self, x: SparseTensor) -> bool:
+        """True iff ``x`` fits this class (dims bounded, nnz bounded)."""
+        return (len(x.dims) == self.order and x.nnz <= self.nnz
+                and all(d <= cd for d, cd in zip(x.dims, self.dims)))
+
+
+def classify(x: SparseTensor, rank: int,
+             n_partitions: int = DEFAULT_PARTITIONS) -> ShapeClass:
+    """The shape class a tenant tensor buckets into.
+
+    Per-mode pow2 dim rounding + pow2 nnz rounding (floored at the
+    partition count so the padded stream is always a whole number of
+    balanced partitions — pow2 ≥ L is automatically a multiple of a
+    pow2 L, so `alto.build` adds no further padding of its own).
+    """
+    L = max(1, int(n_partitions))
+    nnz_c = max(_next_pow2(x.nnz), _next_pow2(L))
+    return ShapeClass(dims=tuple(_next_pow2(d) for d in x.dims),
+                      nnz=nnz_c, n_partitions=L, rank=int(rank),
+                      dtype=str(np.dtype(x.values.dtype)))
+
+
+def pad_to_class(x: SparseTensor, sc: ShapeClass) -> SparseTensor:
+    """Embed ``x`` into its class: class dims, stream padded to class nnz.
+
+    The pad elements come from the shared `ops.pad_sorted_stream` rule —
+    replicated copies of the final COO element with zero values (they
+    land inside an existing coordinate's run after the ALTO sort and
+    contribute nothing to any reduction). An nnz=0 tenant pads with the
+    all-zero coordinate, same as the rule's empty-stream branch.
+    """
+    if not sc.admits(x):
+        raise ValueError(f"tensor dims={x.dims} nnz={x.nnz} does not fit "
+                         f"shape class {sc}")
+    coords = np.asarray(x.coords, np.int32)
+    values = np.asarray(x.values)
+    pad = sc.nnz - x.nnz
+    if pad:
+        if x.nnz == 0:
+            pad_coords = np.zeros((pad, sc.order), np.int32)
+        else:
+            pad_coords = np.repeat(coords[-1:], pad, axis=0)
+        coords = np.concatenate([coords, pad_coords], axis=0)
+        values = np.concatenate(
+            [values, np.zeros((pad,), values.dtype)], axis=0)
+    return SparseTensor(sc.dims, coords, values)
+
+
+def canonical_meta(sc: ShapeClass) -> AltoMeta:
+    """The one `AltoMeta` every member of the class shares.
+
+    A pure function of the class — no data-dependent fields — so plans,
+    compiled executables, and autotuner store entries keyed on it are
+    keyed on the class itself. ``temp_rows`` uses the padded class dims
+    (a partition's mode interval can span the whole extent, so the dim
+    is the only bound valid for every member — the plan layer's VMEM
+    models become conservative class-wide bounds); ``fiber_reuse`` is
+    the no-reuse worst case 1.0, routing every mode output-oriented
+    (the traversal the batched layer can vmap).
+    """
+    return AltoMeta(enc=make_encoding(sc.dims), nnz=sc.nnz,
+                    n_partitions=sc.n_partitions,
+                    temp_rows=tuple(sc.dims),
+                    fiber_reuse=(1.0,) * sc.order)
+
+
+def canonicalize_tensor(at: AltoTensor, sc: ShapeClass) -> AltoTensor:
+    """``at`` (built from a class-padded tensor) with the canonical meta.
+
+    The built meta's data-dependent fields (temp_rows, fiber_reuse)
+    differ per tenant; swapping in the canonical meta makes the tensor a
+    valid representative for class-keyed tuning (`autotune` requires
+    ``at.meta`` to match the meta being tuned) and for the batched
+    stacked pytrees. The stream/partition arrays are shared, not copied.
+    """
+    expect = canonical_meta(sc)
+    if (at.meta.enc != expect.enc or at.words.shape[0] != sc.nnz
+            or at.meta.n_partitions != sc.n_partitions):
+        raise ValueError(f"tensor (dims={at.meta.dims}, "
+                         f"Mp={at.words.shape[0]}) was not built from a "
+                         f"pad_to_class({sc}) input")
+    return AltoTensor(meta=expect, words=at.words, values=at.values,
+                      part_start=at.part_start, part_end=at.part_end)

@@ -26,8 +26,12 @@ caller shares the cached arrays (`plan.build_views` routes through here).
 
 * **Accounting & bounds** — hits/misses/builds are counted
   (`cache_stats`) so the "one build per (tensor, mode) per process"
-  contract is assertable; a lock keeps that contract under concurrent
-  drivers. The cache is LRU-bounded twice over — by entry count
+  contract is assertable; per-key build latches keep that contract under
+  concurrent drivers *without* serializing unrelated requests (a miss
+  registers a pending-build event under the global lock, runs the O(nnz)
+  build outside it, and re-acquires only to insert — so a cache hit on
+  one tensor never blocks behind another tenant's build).
+  The cache is LRU-bounded twice over — by entry count
   (``$REPRO_VIEW_CACHE_SIZE``, default 64) and by approximate resident
   bytes (``$REPRO_VIEW_CACHE_BYTES``, default 2 GiB) — because one view
   is a full O(nnz) copy and a count bound alone would let a sweep over
@@ -55,6 +59,9 @@ _CACHE: "collections.OrderedDict[tuple, OrientedView]" = \
 _CACHE_BYTES: dict[tuple, int] = {}
 _STATS = {"hits": 0, "misses": 0, "builds": 0}
 _LOCK = threading.Lock()
+# key -> Event set when that key's in-flight build lands (or fails). The
+# global lock only guards map bookkeeping; builds run outside it.
+_PENDING: dict[tuple, threading.Event] = {}
 
 _FP_ATTR = "_ingest_fingerprint"
 
@@ -110,30 +117,52 @@ def get_view(at: AltoTensor, mode: int,
              route: str | None = None) -> OrientedView:
     """The oriented view for ``(at, mode)``: cached, built on miss.
 
-    Thread-safe: concurrent misses on the same key build once (the
-    build runs under the lock — rare by construction, and duplicate
-    O(nnz) device allocations would be worse than brief serialization).
+    Thread-safe with per-key build latches (double-checked): the first
+    thread to miss a key registers a pending event under the global lock,
+    builds the O(nnz) view *outside* it, then re-acquires to insert and
+    release waiters. Concurrent misses on the SAME key wait on the event
+    (one build per key — `cache_stats` keeps that assertable), while a
+    hit — or a miss — on any OTHER key proceeds immediately instead of
+    blocking behind an unrelated tenant's build.
     """
     key = (fingerprint(at), int(mode))
-    with _LOCK:
-        view = _CACHE.get(key)
-        if view is not None:
-            _STATS["hits"] += 1
-            _CACHE.move_to_end(key)
-            return view
-        _STATS["misses"] += 1
-        _STATS["builds"] += 1
-        route = route or default_route()
-        view = (alto.oriented_view_device(at, mode) if route == "device"
-                else alto.oriented_view(at, mode))
-        _CACHE[key] = view
-        _CACHE_BYTES[key] = _view_bytes(view)
-        max_entries, max_bytes = _limits()
-        while len(_CACHE) > max(1, max_entries) or (
-                len(_CACHE) > 1
-                and sum(_CACHE_BYTES.values()) > max_bytes):
-            old, _ = _CACHE.popitem(last=False)
-            _CACHE_BYTES.pop(old, None)
+    while True:
+        with _LOCK:
+            view = _CACHE.get(key)
+            if view is not None:
+                _STATS["hits"] += 1
+                _CACHE.move_to_end(key)
+                return view
+            event = _PENDING.get(key)
+            if event is None:
+                # This thread owns the build for `key`.
+                _PENDING[key] = threading.Event()
+                _STATS["misses"] += 1
+                _STATS["builds"] += 1
+        if event is not None:
+            # Another thread is building this key: wait, then re-check
+            # (normally a hit; a failed or instantly-evicted build makes
+            # this thread the next builder).
+            event.wait()
+            continue
+        try:
+            route_ = route or default_route()
+            view = (alto.oriented_view_device(at, mode)
+                    if route_ == "device" else alto.oriented_view(at, mode))
+        except BaseException:
+            with _LOCK:
+                _PENDING.pop(key).set()   # unblock waiters; one re-builds
+            raise
+        with _LOCK:
+            _CACHE[key] = view
+            _CACHE_BYTES[key] = _view_bytes(view)
+            max_entries, max_bytes = _limits()
+            while len(_CACHE) > max(1, max_entries) or (
+                    len(_CACHE) > 1
+                    and sum(_CACHE_BYTES.values()) > max_bytes):
+                old, _ = _CACHE.popitem(last=False)
+                _CACHE_BYTES.pop(old, None)
+            _PENDING.pop(key).set()
         return view
 
 

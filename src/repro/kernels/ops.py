@@ -23,6 +23,7 @@ subsequent calls hit jit's C++ fast path.
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Callable
 
@@ -48,22 +49,35 @@ def _auto_interpret(interpret):
 # ---------------------------------------------------------------------------
 
 _EXEC_CACHE: dict[tuple, Callable] = {}
+# One lock for every module-global mutated here (the executable cache and
+# the timing counter below): concurrent autotuners / serving drivers were
+# racing dict insertions and losing counter increments.
+_OPS_LOCK = threading.Lock()
 
 
 def _cached_executable(key: tuple, build: Callable[[], Callable]) -> Callable:
-    """Return the jitted executable for ``key``, building it on first use."""
-    fn = _EXEC_CACHE.get(key)
-    if fn is None:
-        fn = _EXEC_CACHE[key] = build()
-    return fn
+    """Return the jitted executable for ``key``, building it on first use.
+
+    Thread-safe: the whole check-build-insert runs under the module lock.
+    ``build`` only constructs the `jax.jit` wrapper (tracing/compilation
+    happens lazily at the first call, outside the lock), so holding the
+    lock across it is cheap and keeps the one-entry-per-key contract.
+    """
+    with _OPS_LOCK:
+        fn = _EXEC_CACHE.get(key)
+        if fn is None:
+            fn = _EXEC_CACHE[key] = build()
+        return fn
 
 
 def cache_size() -> int:
-    return len(_EXEC_CACHE)
+    with _OPS_LOCK:
+        return len(_EXEC_CACHE)
 
 
 def cache_clear() -> None:
-    _EXEC_CACHE.clear()
+    with _OPS_LOCK:
+        _EXEC_CACHE.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -79,7 +93,8 @@ def timing_runs() -> int:
     `core.autotune` uses this to prove plan-store hits are measurement
     free: loading a persisted plan must leave the counter untouched.
     """
-    return _TIMING_RUNS
+    with _OPS_LOCK:
+        return _TIMING_RUNS
 
 
 def median_time(fn: Callable, *args, warmup: int = 1,
@@ -94,7 +109,11 @@ def median_time(fn: Callable, *args, warmup: int = 1,
     candidate on a noisy host.
     """
     global _TIMING_RUNS
-    _TIMING_RUNS += 1
+    # Unsynchronized `+= 1` loses updates under concurrent autotuning,
+    # which silently breaks the "store hits are measurement-free" proof
+    # (a lost increment can mask a real measurement).
+    with _OPS_LOCK:
+        _TIMING_RUNS += 1
     for _ in range(max(0, warmup)):
         jax.block_until_ready(fn(*args))
     times = []
@@ -160,16 +179,29 @@ def pad_sorted_stream(rows, words, values, mult: int, pi=None):
     with zero values, so padded elements contribute nothing to any
     reduction. ``rows``/``values``/``pi`` may each be None (padding is
     skipped for absent operands — `delinearize` pads words alone).
-    Returns ``(rows, words, values, pi)``.
+    An nnz=0 stream has no final row to replicate; it pads with zero
+    rows/words instead (still sorted, still value-0), so degenerate
+    tenant inputs flow through the same rule instead of crashing on the
+    empty ``words[-1:]`` slice. Returns ``(rows, words, values, pi)``.
     """
     M = words.shape[0]
-    pad = (-M) % mult
+    # An empty stream pads up to one full block (0 is trivially a
+    # multiple of mult, but a zero-length stream gives every downstream
+    # block grid zero steps).
+    pad = mult if M == 0 else (-M) % mult
     if pad == 0:
         return rows, words, values, pi
+    if M == 0:
+        pad_rows = (None if rows is None
+                    else jnp.zeros((pad,), rows.dtype))
+        pad_words = jnp.zeros((pad, words.shape[1]), words.dtype)
+    else:
+        pad_rows = (None if rows is None
+                    else jnp.broadcast_to(rows[-1:], (pad,)))
+        pad_words = jnp.broadcast_to(words[-1:], (pad, words.shape[1]))
     if rows is not None:
-        rows = jnp.concatenate([rows, jnp.broadcast_to(rows[-1:], (pad,))])
-    words = jnp.concatenate(
-        [words, jnp.broadcast_to(words[-1:], (pad, words.shape[1]))])
+        rows = jnp.concatenate([rows, pad_rows])
+    words = jnp.concatenate([words, pad_words])
     if values is not None:
         values = jnp.concatenate(
             [values, jnp.zeros((pad,), values.dtype)])

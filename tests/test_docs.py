@@ -23,7 +23,8 @@ def _pages():
 def test_docs_pages_exist():
     names = {p.name for p in _pages()}
     for required in ("architecture.md", "alto-format.md", "distributed.md",
-                     "benchmarks.md", "known-issues.md", "autotuning.md"):
+                     "benchmarks.md", "known-issues.md", "autotuning.md",
+                     "serving.md"):
         assert required in names, f"docs/{required} missing"
 
 

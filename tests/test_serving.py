@@ -1,0 +1,442 @@
+"""Multi-tenant serving: shape classes, batched sweeps, concurrency fixes.
+
+Pins the acceptance conditions of the serving layer:
+
+* shape-class bucketing is EXACT — a tenant decomposed through the
+  batched vmapped executable matches its own solo `cp_als`/`cp_apr` run
+  (bitwise against solo-on-the-padded-tensor at equal tiling; to tier-1
+  tolerance against solo-on-the-raw-tensor);
+* per-tenant convergence masking freezes a converged tenant while its
+  bucket-mates keep sweeping;
+* K tenants with distinct shapes but few shape classes cost one ingest
+  trace and one batched-sweep trace PER CLASS, not per tenant (the PR 5
+  trace counters prove it);
+* the view cache survives a threaded stress (N threads x M tensors)
+  with exactly one build per distinct (tensor, mode) key;
+* degenerate tenants (empty, singleton) admit and return well-defined
+  results;
+* a warm plan store dispatches a known class with zero timing runs.
+
+Runs on the hermetic `tests/proptest.py` harness (no hypothesis in the
+offline image).
+"""
+import threading
+
+import numpy as np
+import pytest
+from proptest import given, settings, strategies as st
+
+from repro.core import alto, batched, cpals, cpapr, shapeclass
+from repro.core import plan as plan_mod
+from repro.core import views as views_mod
+from repro.kernels import ops
+from repro.launch.serve_cpd import CpdService
+from repro.sparse.synthetic import uniform_tensor
+from repro.sparse.tensor import SparseTensor
+
+
+RANK = 4
+
+
+def _empty_tensor(dims):
+    return SparseTensor(tuple(dims), np.zeros((0, len(dims)), np.int32),
+                        np.zeros((0,), np.float32))
+
+
+def _class_members(x, sc, plan):
+    """pad -> device ingest -> canonical meta -> cached views."""
+    xp = shapeclass.pad_to_class(x, sc)
+    at = alto.build_device(xp, n_partitions=sc.n_partitions,
+                           compute_reuse=False)
+    at = shapeclass.canonicalize_tensor(at, sc)
+    return at, plan_mod.build_views(at, plan)
+
+
+# ---------------------------------------------------------------------------
+# Shape classes
+# ---------------------------------------------------------------------------
+
+def test_classify_collapses_shapes():
+    """Distinct dims/nnz in the same pow2 envelope share one class."""
+    xs = [uniform_tensor((9, 7, 5), 90, seed=1),
+          uniform_tensor((12, 6, 8), 100, seed=2),
+          uniform_tensor((16, 8, 8), 128, seed=3)]
+    scs = {shapeclass.classify(x, RANK) for x in xs}
+    assert len(scs) == 1
+    (sc,) = scs
+    assert sc.dims == (16, 8, 8) and sc.nnz == 128
+    assert all(sc.admits(x) for x in xs)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dims=st.lists(st.integers(1, 40), min_size=2, max_size=4),
+       nnz=st.integers(0, 200), seed=st.integers(0, 2**31 - 1))
+def test_pad_to_class_preserves_content(dims, nnz, seed):
+    """Padding adds only zero-valued elements inside the class envelope,
+    and the padded stream length always equals the class nnz (a whole
+    number of balanced partitions)."""
+    x = (uniform_tensor(tuple(dims), nnz, seed=seed) if nnz
+         else _empty_tensor(dims))
+    m = x.nnz                       # generators deduplicate: m <= nnz
+    sc = shapeclass.classify(x, RANK)
+    xp = shapeclass.pad_to_class(x, sc)
+    assert xp.nnz == sc.nnz and xp.dims == sc.dims
+    assert sc.nnz % sc.n_partitions == 0
+    np.testing.assert_array_equal(np.asarray(xp.coords)[:m],
+                                  np.asarray(x.coords))
+    np.testing.assert_array_equal(np.asarray(xp.values)[:m],
+                                  np.asarray(x.values))
+    assert not np.asarray(xp.values)[m:].any()
+    # canonical meta is a pure function of the class: no data leaks in
+    meta = shapeclass.canonical_meta(sc)
+    assert meta.nnz == sc.nnz and meta.dims == sc.dims
+    assert meta.fiber_reuse == (1.0,) * len(sc.dims)
+
+
+# ---------------------------------------------------------------------------
+# Bucketed vs individual parity
+# ---------------------------------------------------------------------------
+
+def test_bucketed_bitwise_matches_solo_on_padded():
+    """At equal tiling — solo `cp_als` run on the SAME class-padded
+    tensor, class plan, and embedded init — the batched path is the
+    identical computation and the factors match bitwise."""
+    xs = [uniform_tensor((9, 7, 5), 90, seed=1),
+          uniform_tensor((12, 6, 8), 100, seed=2)]
+    sc = shapeclass.classify(xs[0], RANK)
+    plan = plan_mod.make_class_plan(sc, backend="reference")
+    ats, views, rdims, inits = [], [], [], []
+    for i, x in enumerate(xs):
+        at, vs = _class_members(x, sc, plan)
+        ats.append(at)
+        views.append(vs)
+        rdims.append(x.dims)
+        inits.append(cpals.init_factors(x.dims, RANK, seed=i))
+    res = batched.batched_cp_als(ats, views, rdims, RANK, plan=plan,
+                                 n_iters=4, tol=0.0, init_factors=inits,
+                                 capacity=len(xs))
+    for i, x in enumerate(xs):
+        solo = cpals.cp_als(
+            ats[i], RANK, n_iters=4, tol=0.0, plan=plan, views=views[i],
+            factors=batched.embed_factors(inits[i], sc.dims))
+        for n, (A, B) in enumerate(zip(res.results[i].factors,
+                                       solo.factors)):
+            np.testing.assert_array_equal(
+                np.asarray(A), np.asarray(B)[:x.dims[n]],
+                err_msg=f"tenant {i} mode {n} not bitwise equal")
+        np.testing.assert_array_equal(np.asarray(res.results[i].lam),
+                                      np.asarray(solo.lam))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       nnz_a=st.integers(40, 128), nnz_b=st.integers(40, 128))
+def test_tenant_matches_individual_cp_als(seed, nnz_a, nnz_b):
+    """Against each tenant's OWN solo run on the raw (unpadded) tensor
+    with its own meta: the embedded-zero-rows argument says the batched
+    trajectory is the solo trajectory, up to traversal reordering."""
+    xs = [uniform_tensor((9, 7, 5), nnz_a, seed=seed),
+          uniform_tensor((12, 6, 8), nnz_b, seed=seed + 1)]
+    sc = shapeclass.ShapeClass(dims=(16, 8, 8), nnz=128, n_partitions=8,
+                               rank=RANK)
+    assert all(sc.admits(x) for x in xs)
+    plan = plan_mod.make_class_plan(sc, backend="reference")
+    ats, views, rdims = [], [], []
+    for x in xs:
+        at, vs = _class_members(x, sc, plan)
+        ats.append(at)
+        views.append(vs)
+        rdims.append(x.dims)
+    res = batched.batched_cp_als(ats, views, rdims, RANK, plan=plan,
+                                 n_iters=4, tol=0.0, capacity=4)
+    for i, x in enumerate(xs):
+        solo = cpals.cp_als(alto.build(x), RANK, n_iters=4, tol=0.0,
+                            seed=0)
+        for A, B in zip(res.results[i].factors, solo.factors):
+            np.testing.assert_allclose(np.asarray(A), np.asarray(B),
+                                       rtol=2e-4, atol=2e-5)
+        assert res.results[i].fits[-1] == pytest.approx(
+            solo.fits[-1], abs=1e-6)
+
+
+def test_tenant_matches_individual_cp_apr():
+    xs = [uniform_tensor((9, 7, 5), 90, seed=5, count_data=True),
+          uniform_tensor((16, 8, 8), 128, seed=6, count_data=True)]
+    sc = shapeclass.classify(xs[0], RANK)
+    plan = plan_mod.make_class_plan(sc, backend="reference")
+    ats, views, rdims = [], [], []
+    for x in xs:
+        at, vs = _class_members(x, sc, plan)
+        ats.append(at)
+        views.append(vs)
+        rdims.append(x.dims)
+    p = cpapr.CpaprParams(k_max=4)
+    res = batched.batched_cp_apr(ats, views, rdims, RANK, plan=plan,
+                                 params=p, capacity=3)
+    for i, x in enumerate(xs):
+        solo = cpapr.cp_apr(alto.build(x), RANK, params=p, seed=0)
+        for A, B in zip(res.results[i].factors, solo.factors):
+            np.testing.assert_allclose(np.asarray(A), np.asarray(B),
+                                       rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(res.results[i].lam),
+                                   np.asarray(solo.lam), rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Per-tenant convergence masking
+# ---------------------------------------------------------------------------
+
+def test_convergence_masking_freezes_converged_tenant():
+    """A rank-1 tenant converges in a couple of sweeps; its bucket-mate
+    needs many more. The frozen tenant's result must equal its solo
+    early-stopped run — if masking leaked, the extra sweeps the mate
+    forces would keep mutating the converged factors."""
+    rng = np.random.default_rng(0)
+    # Exactly representable rank-1 tensor: converges almost immediately.
+    u, v, w = (rng.random(9) + 0.5, rng.random(7) + 0.5,
+               rng.random(5) + 0.5)
+    dense = np.einsum("i,j,k->ijk", u, v, w).astype(np.float32)
+    mask = rng.random(dense.shape) < 0.4
+    coords = np.argwhere(mask).astype(np.int32)[:100]
+    easy = SparseTensor((9, 7, 5), coords,
+                        dense[tuple(coords.T)].astype(np.float32))
+    hard = uniform_tensor((12, 6, 8), 128, seed=7)
+    sc = shapeclass.ShapeClass(dims=(16, 8, 8), nnz=128, n_partitions=8,
+                               rank=1)
+    plan = plan_mod.make_class_plan(sc, backend="reference")
+    ats, views, rdims = [], [], []
+    for x in (easy, hard):
+        at, vs = _class_members(x, sc, plan)
+        ats.append(at)
+        views.append(vs)
+        rdims.append(x.dims)
+    tol = 1e-4
+    res = batched.batched_cp_als(ats, views, rdims, 1, plan=plan,
+                                 n_iters=20, tol=tol, capacity=2)
+    easy_r, hard_r = res.results
+    assert easy_r.n_iters < hard_r.n_iters, (
+        "easy tenant should converge first")
+    assert res.n_sweeps == hard_r.n_iters
+    solo = cpals.cp_als(alto.build(easy), 1, n_iters=20, tol=tol, seed=0)
+    assert easy_r.n_iters == solo.n_iters
+    for A, B in zip(easy_r.factors, solo.factors):
+        np.testing.assert_allclose(np.asarray(A), np.asarray(B),
+                                   rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Threaded view-cache stress (the per-key build-latch fix)
+# ---------------------------------------------------------------------------
+
+def test_view_cache_threaded_stress():
+    """N threads hammer M tensors x all modes concurrently: every thread
+    gets the right view, and builds == distinct keys (one build per key,
+    no duplicated O(nnz) work, no lost inserts)."""
+    n_threads, n_tensors = 8, 6
+    xs = [uniform_tensor((8, 6, 4), 64, seed=100 + i)
+          for i in range(n_tensors)]
+    ats = [alto.build(x) for x in xs]
+    n_modes = 3
+    views_mod.cache_clear()
+    base = views_mod.cache_stats()
+    assert base["builds"] == 0
+    results: dict[int, list] = {}
+    errors: list[BaseException] = []
+    start = threading.Barrier(n_threads)
+
+    def worker(tid):
+        rng = np.random.default_rng(tid)
+        try:
+            start.wait()
+            got = []
+            order = [(i, m) for i in range(n_tensors)
+                     for m in range(n_modes)]
+            rng.shuffle(order)
+            for i, m in order:
+                got.append((i, m, views_mod.get_view(ats[i], m)))
+            results[tid] = got
+        except BaseException as e:  # noqa: BLE001 — surfaced below
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    stats = views_mod.cache_stats()
+    n_keys = n_tensors * n_modes
+    assert stats["builds"] == n_keys, stats
+    assert stats["hits"] == n_threads * n_keys - n_keys, stats
+    # Every thread saw the one cached object per key.
+    canon = {(i, m): views_mod.get_view(ats[i], m)
+             for i in range(n_tensors) for m in range(n_modes)}
+    for got in results.values():
+        for i, m, view in got:
+            assert view is canon[(i, m)]
+
+
+def test_ops_timing_counter_threaded():
+    """`ops.median_time` bumps its proof-of-measurement counter under a
+    lock now; concurrent timings must not lose increments."""
+    before = ops.timing_runs()
+    n_threads, per_thread = 8, 5
+
+    def worker():
+        for _ in range(per_thread):
+            ops.median_time(lambda: np.add(1, 1), warmup=0, iters=1)
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert ops.timing_runs() - before == n_threads * per_thread
+
+
+# ---------------------------------------------------------------------------
+# Degenerate tenants
+# ---------------------------------------------------------------------------
+
+def test_pad_sorted_stream_empty():
+    """The padding rule's empty-stream branch: no crash, zero rows."""
+    import jax.numpy as jnp
+    rows = jnp.zeros((0,), jnp.int32)
+    words = jnp.zeros((0, 2), jnp.uint32)
+    values = jnp.zeros((0,), jnp.float32)
+    r, w, v, pi = ops.pad_sorted_stream(rows, words, values, mult=8)
+    assert r.shape == (8,) and w.shape == (8, 2) and v.shape == (8,)
+    assert not np.asarray(v).any() and not np.asarray(r).any()
+
+
+def test_empty_and_singleton_direct():
+    """`cp_als`/`cp_apr` on empty and single-nonzero tensors return
+    well-defined results instead of raising or NaN-ing."""
+    empty = _empty_tensor((6, 5, 4))
+    for build in (alto.build, alto.build_device):
+        at = build(empty)
+        r = cpals.cp_als(at, RANK, n_iters=5)
+        assert r.fits == [1.0] and r.n_iters == 0
+        assert all(not np.asarray(A).any() for A in r.factors)
+        assert not np.asarray(r.lam).any()
+        ra = cpapr.cp_apr(at, RANK, params=cpapr.CpaprParams(k_max=3))
+        assert all(not np.asarray(A).any() for A in ra.factors)
+        assert np.isfinite(np.asarray(ra.lam)).all()
+    single = SparseTensor((6, 5, 4), np.array([[2, 3, 1]], np.int32),
+                          np.array([2.5], np.float32))
+    r = cpals.cp_als(alto.build(single), RANK, n_iters=10)
+    assert np.isfinite(r.fits).all()
+    assert r.fits[-1] == pytest.approx(1.0, abs=1e-3)
+
+
+def test_degenerate_tenants_through_service():
+    """admit -> bucket -> decompose for empty and singleton tenants."""
+    svc = CpdService(RANK, capacity=4, n_iters=5, tune="off",
+                     backend="reference")
+    ids = [svc.submit(_empty_tensor((6, 5, 4))),
+           svc.submit(SparseTensor((6, 5, 4),
+                                   np.array([[1, 1, 1]], np.int32),
+                                   np.array([3.0], np.float32))),
+           svc.submit(uniform_tensor((6, 5, 4), 30, seed=9))]
+    responses = {r.request_id: r for r in svc.process()}
+    assert set(responses) == set(ids)
+    r_empty = responses[ids[0]].result
+    assert r_empty.fits[-1] == pytest.approx(1.0, abs=1e-6)
+    assert all(not np.asarray(A).any() for A in r_empty.factors)
+    assert [A.shape for A in r_empty.factors] == [(6, RANK), (5, RANK),
+                                                  (4, RANK)]
+    for rid in ids[1:]:
+        res = responses[rid].result
+        assert np.isfinite(np.asarray(res.fits)).all()
+        assert all(np.isfinite(np.asarray(A)).all() for A in res.factors)
+
+
+# ---------------------------------------------------------------------------
+# Zero-warmup dispatch via the class-keyed plan store
+# ---------------------------------------------------------------------------
+
+def test_class_plan_key_is_tenant_independent():
+    xs = [uniform_tensor((9, 7, 5), 90, seed=1),
+          uniform_tensor((12, 6, 8), 100, seed=2)]
+    keys = {shapeclass.classify(x, RANK) for x in xs}
+    assert len(keys) == 1
+    from repro.core import autotune
+    (sc,) = keys
+    assert (autotune.class_plan_key(sc, "reference")
+            == autotune.class_plan_key(sc, "reference"))
+    sc2 = shapeclass.ShapeClass(dims=sc.dims, nnz=sc.nnz * 2,
+                                n_partitions=sc.n_partitions, rank=sc.rank)
+    assert (autotune.class_plan_key(sc, "reference")
+            != autotune.class_plan_key(sc2, "reference"))
+
+
+def test_zero_warmup_second_service(tmp_path, monkeypatch):
+    """A class tuned once dispatches measurement-free forever after: the
+    second service instance (fresh process state modulo the on-disk
+    store) serves the same class with ZERO additional timing runs."""
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "plans.json"))
+    xs = [uniform_tensor((9, 7, 5), 90, seed=i) for i in range(3)]
+
+    svc1 = CpdService(RANK, capacity=4, n_iters=3, tune="auto",
+                      backend="reference")
+    for x in xs:
+        svc1.submit(x)
+    svc1.process()
+    runs_after_first = ops.timing_runs()
+
+    svc2 = CpdService(RANK, capacity=4, n_iters=3, tune="auto",
+                      backend="reference")
+    for x in xs:
+        svc2.submit(x)
+    out = svc2.process()
+    assert len(out) == len(xs)
+    assert ops.timing_runs() == runs_after_first, (
+        "store hit must cost zero timing runs")
+
+
+# ---------------------------------------------------------------------------
+# End-to-end acceptance: K tenants, few classes, per-class trace bound
+# ---------------------------------------------------------------------------
+
+def test_acceptance_bucketed_serving():
+    """K=9 tenants with distinct shapes collapse onto <= 3 shape classes;
+    ingest-build and batched-sweep traces are bounded by the CLASS count,
+    and every tenant matches its individual run to tier-1 tolerance."""
+    specs = [((9, 7, 5), 90), ((12, 6, 8), 100), ((16, 8, 8), 128),
+             ((20, 12, 9), 200), ((30, 14, 16), 250), ((32, 16, 16), 256),
+             ((6, 8, 5), 60), ((8, 8, 8), 64), ((7, 5, 8), 55)]
+    xs = [uniform_tensor(d, m, seed=20 + i)
+          for i, (d, m) in enumerate(specs)]
+    classes = {shapeclass.classify(x, RANK) for x in xs}
+    assert len(xs) >= 8 and len(classes) <= 3
+
+    ingest0 = alto.device_ingest_traces()
+    sweep0 = batched.sweep_traces()
+    svc = CpdService(RANK, capacity=4, n_iters=4, tol=0.0, tune="off",
+                     backend="reference")
+    ids = [svc.submit(x) for x in xs]
+    responses = {r.request_id: r for r in svc.process()}
+    assert set(responses) == set(ids)
+
+    ingest1 = alto.device_ingest_traces()
+    sweep1 = batched.sweep_traces()
+    assert ingest1["build"] - ingest0["build"] <= len(classes)
+    assert sweep1["als"] - sweep0["als"] <= len(classes)
+    n_modes = 3
+    assert ingest1["view"] - ingest0["view"] <= len(classes) * n_modes
+
+    stats = svc.stats()
+    assert stats["tenants_done"] == len(xs)
+    assert stats["shape_classes"] == len(classes)
+    assert stats["latency_p50_s"] <= stats["latency_p99_s"]
+
+    for i, x in enumerate(xs):
+        solo = cpals.cp_als(alto.build(x), RANK, n_iters=4, tol=0.0,
+                            seed=0)
+        got = responses[ids[i]].result
+        assert [A.shape for A in got.factors] == [(I, RANK)
+                                                  for I in x.dims]
+        for A, B in zip(got.factors, solo.factors):
+            np.testing.assert_allclose(np.asarray(A), np.asarray(B),
+                                       rtol=2e-4, atol=2e-5)
