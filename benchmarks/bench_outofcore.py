@@ -1,0 +1,98 @@
+"""Out-of-core chunked execution vs in-core (docs/out-of-core.md).
+
+Rows (per tensor, MTTKRP mode 0, scratch-carry tiling from the plan):
+
+* ``outofcore/<t>/incore`` — the in-core carry kernel; derived carries
+  ``nnz_per_s`` and the modeled in-core working set bytes;
+* ``outofcore/<t>/chunked_c<k>`` — the chunked executor at ``k`` chunks;
+  derived carries ``nnz_per_s``, the modeled ``chunk_bytes``
+  (`plan.chunk_hbm_bytes`, the double-buffered device footprint), the
+  prefetch overlap ratio (prefetches / chunks — 1-1/k by construction,
+  every chunk beyond the first is prefetched ahead of compute), and
+  ``overlap_eff``: (in-core compute time) / (chunked wall time), the
+  fraction of the chunked wall clock not lost to the host loop + copies
+  (→ 1.0 when prefetch fully hides transfers; ~structural noise on the
+  CPU proxy host, see docs/known-issues.md).
+
+Each chunked row ASSERTS bitwise parity with the in-core result before
+timing — a bench that silently diverged would be measuring a different
+computation.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import alto, plan as plan_mod
+from repro.kernels import ops
+from repro.sparse import synthetic
+
+RANK = 16
+MODE = 0
+
+
+def _factors(dims, R, seed=0):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal((I, R)).astype(np.float32))
+            for I in dims]
+
+
+def run(quick: bool = False):
+    cases = {"uniform_mid": dict(dims=(256, 128, 64), nnz=30_000)}
+    if not quick:
+        cases["uniform_wide"] = dict(dims=(2048, 512, 256), nnz=120_000)
+    for name, kw in cases.items():
+        x = synthetic.uniform_tensor(seed=0, **kw)
+        at = alto.build(x, n_partitions=8)
+        factors = _factors(x.dims, RANK)
+        mp = plan_mod.static_mode_plan(at.meta, MODE, RANK,
+                                       force_carry=True)
+        bm, rb = mp.block_m, mp.r_block
+        nnz = at.meta.nnz
+
+        def incore(view, factors):
+            return ops.mttkrp_oriented_carry(view, factors, block_m=bm,
+                                             r_block=rb, interpret=None)
+
+        view = alto.oriented_view(at, MODE)
+        want = incore(view, factors)
+        t_in = time_call(incore, view, factors)
+        incore_bytes = plan_mod.incore_working_set_bytes(at.meta, RANK)
+        emit(f"outofcore/{name}/incore", t_in,
+             f"nnz_per_s={nnz / (t_in * 1e-6):.3e};"
+             f"incore_bytes={incore_bytes};block_m={bm};r_block={rb}")
+
+        # Chunk grids from coarse to fine; chunk_m stays block-aligned.
+        padded = -(-at.meta.nnz // bm) * bm
+        for n_chunks in (2, 8) if quick else (2, 8, 32):
+            chunk_m = max(bm, (-(-padded // n_chunks) // bm) * bm)
+            k = plan_mod.chunk_count(at.meta, chunk_m)
+
+            def chunked(view, factors, chunk_m=chunk_m):
+                return ops.mttkrp_oriented_chunked(
+                    view, factors, chunk_m=chunk_m, block_m=bm,
+                    r_block=rb, interpret=None)
+
+            got = chunked(view, factors)
+            assert jnp.array_equal(want, got), (
+                f"{name}: chunked (chunk_m={chunk_m}) diverged from "
+                "in-core — refusing to time a wrong computation")
+            s0 = ops.chunk_stats()
+            t_ch = time_call(chunked, view, factors)
+            s1 = ops.chunk_stats()
+            runs = (s1["chunks"] - s0["chunks"]) // k
+            pf_ratio = ((s1["prefetches"] - s0["prefetches"])
+                        / max(1, s1["chunks"] - s0["chunks"]))
+            chunk_bytes = plan_mod.chunk_hbm_bytes(at.meta, chunk_m, RANK)
+            emit(f"outofcore/{name}/chunked_c{k}", t_ch,
+                 f"nnz_per_s={nnz / (t_ch * 1e-6):.3e};"
+                 f"chunk_bytes={chunk_bytes};chunk_m={chunk_m};"
+                 f"prefetch_ratio={pf_ratio:.3f};"
+                 f"overlap_eff={min(1.0, t_in / t_ch):.3f};"
+                 f"bitwise=1;runs={runs}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -150,7 +150,12 @@ def cp_als(at: AltoTensor, rank: int, n_iters: int = 50, tol: float = 1e-5,
     lam = jnp.ones((rank,), dtype=at.values.dtype)
     normX2 = float((np.asarray(at.values, np.float64) ** 2).sum())
 
-    sweep = jax.jit(functools.partial(_sweep, plan, gram_fn=gram_fn))
+    sweep_fn = functools.partial(_sweep, plan, gram_fn=gram_fn)
+    # Streaming (out-of-core) plans keep the sweep a host loop: the
+    # chunked executors are themselves host loops over per-chunk jitted
+    # calls, and a host-resident stream is not a jit operand. The dense
+    # algebra still runs the same XLA kernels per op.
+    sweep = sweep_fn if plan.streaming is not None else jax.jit(sweep_fn)
     fits: list[float] = []
     prev_fit = -np.inf
     it = 0

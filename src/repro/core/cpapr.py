@@ -128,6 +128,52 @@ def _mode_update(at: AltoTensor, view: OrientedView | None, mode: int,
     return A_new, lam_new, Phi_last, mode_converged, n_inner, kkt_first
 
 
+def _mode_update_streaming(at: AltoTensor, view, mode: int,
+                           lam, factors, phi_prev, first_outer: bool,
+                           pre_pi: bool, p: CpaprParams,
+                           plan: plan_mod.ExecutionPlan):
+    """Out-of-core twin of `_mode_update`: host inner loop, chunked Φ.
+
+    A streaming plan's Φ is a host loop over chunks (`kernels.ops`), so
+    the jitted `lax.scan` inner loop is replaced by a python loop with
+    the IDENTICAL semantics: Φ is computed from the current B, the KKT
+    check freezes B on convergence, and the loop breaks where the scan
+    would only recompute Φ of a frozen B (the same value — the masked
+    scan runs `l_max` steps, the break just skips the no-op tail). Under
+    ALTO-PRE there is no full-stream Π precompute — the chunked executor
+    rebuilds each chunk's Π rows on device (`execute_phi(pre=True)`),
+    elementwise-identical, so the result stays bitwise (see
+    `docs/out-of-core.md` for the cost-semantics shift).
+    """
+    A = factors[mode]
+    if first_outer:
+        S = jnp.zeros_like(A)
+    else:
+        S = jnp.where((A < p.kappa_tol) & (phi_prev > 1.0), p.kappa, 0.0)
+    B = (A + S) * lam[None, :]
+
+    Phi = None
+    n_inner = 0
+    kkt_first = None
+    for _ in range(p.l_max):
+        Phi = plan_mod.execute_phi(plan, at, view, B, mode,
+                                   factors=factors, eps=p.eps_div,
+                                   pre=pre_pi)
+        kkt = jnp.max(jnp.abs(jnp.minimum(B, 1.0 - Phi)))
+        if kkt_first is None:
+            kkt_first = kkt
+        if bool(kkt < p.tau):
+            break               # frozen: further steps recompute this Phi
+        B = B * Phi
+        n_inner += 1
+
+    lam_new = jnp.sum(B, axis=0)
+    lam_new = jnp.where(lam_new > 0, lam_new, 1.0)
+    A_new = B / lam_new[None, :]
+    return (A_new, lam_new, Phi, n_inner == 0,
+            jnp.asarray(n_inner, jnp.int32), kkt_first)
+
+
 def log_likelihood(at: AltoTensor, lam, factors, eps=1e-10):
     """Poisson log-likelihood Σ x·log(m) − Σ m (columns 1-normalized)."""
     coords = delinearize(at.meta.enc, at.words)
@@ -195,9 +241,14 @@ def cp_apr(at: AltoTensor, rank: int, params: CpaprParams | None = None,
                       and heuristics.is_oriented(plan.modes[n].traversal))
                   else "recursive" for n in range(N)]
 
-    update = jax.jit(_mode_update,
-                     static_argnames=("mode", "first_outer", "pre_pi", "p",
-                                      "plan"))
+    if plan.streaming is not None:
+        # Out-of-core: the chunked Φ executor is a host loop over
+        # per-chunk jitted calls, and a HostStream is not a jit operand.
+        update = _mode_update_streaming
+    else:
+        update = jax.jit(_mode_update,
+                         static_argnames=("mode", "first_outer", "pre_pi",
+                                          "p", "plan"))
 
     phi_prev = [jnp.zeros_like(A) for A in factors]
     kkt_hist: list[float] = []

@@ -62,6 +62,7 @@ Two refinements over the original analytic model:
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
@@ -94,6 +95,22 @@ class ModePlan:
 
 
 @dataclasses.dataclass(frozen=True)
+class StreamPlan:
+    """Out-of-core chunking decision (all ints — hashable, jit-static).
+
+    Present on a plan iff the padded oriented stream plus the resident
+    working set overflows the configured device byte budget; the chunked
+    executors in `kernels.ops` then stream block-aligned slices of the
+    host-resident stream (`core.stream.HostStream`) through device
+    memory with cross-chunk carry chains.
+    """
+    chunk_m: int          # elements per chunk (multiple of every block_m)
+    n_chunks: int         # ceil(stream_len / chunk_m) — the executed grid
+    device_bytes: int     # the budget the choice was made against
+    stream_bytes: int     # in-core working set that overflowed it
+
+
+@dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
     """Static per-(tensor, rank) kernel routing, hashable for jit/caching."""
     meta: AltoMeta
@@ -106,6 +123,10 @@ class ExecutionPlan:
     # first axis of this mesh (None = single device). Mesh is hashable, so
     # mesh-bearing plans remain valid static jit arguments / cache keys.
     mesh: jax.sharding.Mesh | None = None
+    # Out-of-core: non-None routes every oriented mode through the
+    # chunked executors (the plan forces the carry family then). Default
+    # None keeps plans from older stores / callers valid unchanged.
+    streaming: StreamPlan | None = None
 
     def mode_plan(self, mode: int) -> ModePlan:
         return self.modes[mode]
@@ -368,6 +389,103 @@ def carry_fits_vmem(meta: AltoMeta, mode: int, rank: int,
                                      dtype_bytes) <= vmem_limit
 
 
+# ---------------------------------------------------------------------------
+# Out-of-core (HBM) byte models and chunk-size selection
+# ---------------------------------------------------------------------------
+#
+# The VMEM models above size one grid step; these size what the DEVICE as
+# a whole must hold. In-core, that is the full padded oriented stream plus
+# the chunk-independent residency (factors, output accumulator, Φ's B
+# operand, the carry). When it overflows the configured device budget the
+# plan goes streaming: only two chunks (double buffer) of the stream are
+# in flight at a time. Every model is exact byte accounting —
+# `tests/test_heuristics_boundaries.py` pins them term by term.
+
+def stream_elem_bytes(meta: AltoMeta, dtype_bytes: int = 4) -> int:
+    """Device bytes per streamed element: words + row + value."""
+    return meta.enc.n_words * 4 + 4 + dtype_bytes
+
+
+def streaming_resident_bytes(meta: AltoMeta, rank: int,
+                             dtype_bytes: int = 4) -> int:
+    """Chunk-independent device residency of the chunked executors.
+
+    All factors (Σ I·R — the chunk kernels read every other mode's
+    factor), the worst-mode (I_max, R) output accumulator, Φ's resident
+    (I_max, R) B operand, and the (1,) + (1, R) carry pair.
+    """
+    factors = sum(meta.dims) * rank * dtype_bytes
+    i_max = max(meta.dims)
+    out_accum = i_max * rank * dtype_bytes
+    b_operand = i_max * rank * dtype_bytes
+    carry = 4 + rank * dtype_bytes
+    return factors + out_accum + b_operand + carry
+
+
+def incore_working_set_bytes(meta: AltoMeta, rank: int,
+                             dtype_bytes: int = 4) -> int:
+    """Device bytes the IN-CORE oriented path holds: the whole padded
+    stream plus the chunk-independent residency. The quantity the
+    streaming decision compares against the device budget."""
+    return (heuristics.stream_len(meta) * stream_elem_bytes(meta,
+                                                            dtype_bytes)
+            + streaming_resident_bytes(meta, rank, dtype_bytes))
+
+
+def chunk_hbm_bytes(meta: AltoMeta, chunk_m: int, rank: int,
+                    dtype_bytes: int = 4) -> int:
+    """Device bytes the chunked executors hold at chunk size ``chunk_m``:
+    TWO in-flight chunks (the compute chunk and the prefetched next one)
+    plus the chunk-independent residency."""
+    return (2 * chunk_m * stream_elem_bytes(meta, dtype_bytes)
+            + streaming_resident_bytes(meta, rank, dtype_bytes))
+
+
+def needs_streaming(meta: AltoMeta, rank: int, device_bytes: int,
+                    dtype_bytes: int = 4) -> bool:
+    """True iff the in-core working set overflows ``device_bytes``."""
+    return incore_working_set_bytes(meta, rank, dtype_bytes) > device_bytes
+
+
+def chunk_count(meta: AltoMeta, chunk_m: int) -> int:
+    """Chunks the executors run: ceil over the partition-padded stream.
+
+    Independent of block_m — the block padding never adds a chunk,
+    because chunk_m is a multiple of every block_m and the smallest
+    block_m-multiple ≥ Mp is ≤ the smallest chunk_m-multiple ≥ Mp.
+    """
+    return -(-heuristics.stream_len(meta) // chunk_m)
+
+
+def choose_chunk_m(meta: AltoMeta, rank: int, device_bytes: int,
+                   align: int, dtype_bytes: int = 4) -> int:
+    """Largest ``align``-multiple chunk whose double-buffered footprint
+    fits ``device_bytes``, capped at the aligned stream length.
+
+    ``align`` is the max block_m across the plan's modes (block_m are
+    powers of two, so the max is a common multiple) — chunk boundaries
+    then sit on block boundaries for every mode, the bitwise-parity
+    precondition. If even one aligned chunk overflows, the budget is
+    advisory and one ``align`` chunk is returned (same contract as the
+    VMEM choosers: the executor still runs, the device just holds more
+    than asked).
+    """
+    elem = stream_elem_bytes(meta, dtype_bytes)
+    resident = streaming_resident_bytes(meta, rank, dtype_bytes)
+    avail = device_bytes - resident
+    per_chunk = max(0, avail) // (2 * elem)
+    chunk = max(align, (per_chunk // align) * align)
+    padded = -(-heuristics.stream_len(meta) // align) * align
+    return min(chunk, padded)
+
+
+def default_device_bytes() -> int | None:
+    """Process-wide device byte budget: ``$REPRO_DEVICE_BYTES`` or None
+    (None = assume device-resident, never stream)."""
+    v = os.environ.get("REPRO_DEVICE_BYTES", "")
+    return int(v) if v else None
+
+
 def _mttkrp_vmem_model(traversal: heuristics.Traversal):
     """The MTTKRP footprint function the traversal actually runs."""
     if traversal is heuristics.Traversal.ORIENTED_CARRY:
@@ -477,6 +595,7 @@ def _mode_plan(meta: AltoMeta, mode: int, rank: int,
 def static_mode_plan(meta: AltoMeta, mode: int, rank: int, *,
                      dtype_bytes: int = 4, vmem_limit: int = VMEM_BYTES,
                      force_oriented: bool = False,
+                     force_carry: bool = False,
                      pre_pi: bool = False) -> ModePlan:
     """The analytic-model choice for one mode (the pre-autotune answer).
 
@@ -486,10 +605,18 @@ def static_mode_plan(meta: AltoMeta, mode: int, rank: int, *,
     scratch-carry variant by modelled HBM traffic
     (`heuristics.choose_oriented_variant`), gated on the carry kernel's
     resident-output VMEM feasibility (:func:`carry_fits_vmem`).
+
+    ``force_carry`` pins the scratch-carry traversal outright — streaming
+    plans require it (the chunked executors ARE the carry scan; the
+    carry VMEM gate turns advisory there, as out-of-core has no in-core
+    fallback to route to).
     """
-    traversal = (heuristics.Traversal.OUTPUT_ORIENTED if force_oriented
-                 else heuristics.choose_traversal(meta, mode))
-    if heuristics.is_oriented(traversal):
+    if force_carry:
+        traversal = heuristics.Traversal.ORIENTED_CARRY
+    else:
+        traversal = (heuristics.Traversal.OUTPUT_ORIENTED if force_oriented
+                     else heuristics.choose_traversal(meta, mode))
+    if not force_carry and heuristics.is_oriented(traversal):
         traversal = heuristics.choose_oriented_variant(
             meta, mode, rank, dtype_bytes,
             carry_feasible=carry_fits_vmem(meta, mode, rank, dtype_bytes,
@@ -596,6 +723,7 @@ def make_plan(meta: AltoMeta, rank: int, *, backend: str | None = None,
               vmem_limit: int = VMEM_BYTES,
               fast_mem_bytes: int = heuristics.DEFAULT_FAST_MEM_BYTES,
               mesh: jax.sharding.Mesh | None = None,
+              device_bytes: int | None = None,
               tune: str = "off",
               tune_objective: str = "mttkrp",
               at: "AltoTensor | None" = None,
@@ -638,6 +766,19 @@ def make_plan(meta: AltoMeta, rank: int, *, backend: str | None = None,
         raise ValueError(f"unknown backend {backend!r}")
     if tune not in ("off", "auto", "force"):
         raise ValueError(f"unknown tune mode {tune!r}")
+    if device_bytes is None:
+        device_bytes = default_device_bytes()
+    streaming_needed = (device_bytes is not None
+                        and needs_streaming(meta, rank, device_bytes,
+                                            dtype_bytes))
+    if streaming_needed and mesh is not None:
+        raise ValueError("out-of-core streaming does not compose with "
+                         "mesh-sharded plans yet (shard first, then size "
+                         "device_bytes per shard)")
+    if streaming_needed and tune != "off":
+        raise ValueError("streaming plans cannot be autotuned yet: the "
+                         "plan store has no chunk dimension "
+                         "(pass tune='off' with device_bytes=)")
     if tune != "off":
         from repro.core import autotune
         tuned = autotune.tuned_plan(
@@ -658,11 +799,20 @@ def make_plan(meta: AltoMeta, rank: int, *, backend: str | None = None,
         static_mode_plan(meta, n, rank, dtype_bytes=dtype_bytes,
                          vmem_limit=vmem_limit,
                          force_oriented=mesh is not None,
+                         force_carry=streaming_needed,
                          pre_pi=pi_policy is heuristics.PiPolicy.PRE)
         for n in range(meta.enc.ndim))
+    streaming = None
+    if streaming_needed:
+        align = max(m.block_m for m in modes)
+        cm = choose_chunk_m(meta, rank, device_bytes, align, dtype_bytes)
+        streaming = StreamPlan(
+            chunk_m=cm, n_chunks=chunk_count(meta, cm),
+            device_bytes=device_bytes,
+            stream_bytes=incore_working_set_bytes(meta, rank, dtype_bytes))
     return ExecutionPlan(meta=meta, rank=rank, backend=backend,
                          interpret=interpret, pi_policy=pi_policy,
-                         modes=modes, mesh=mesh)
+                         modes=modes, mesh=mesh, streaming=streaming)
 
 
 def plan_for(at: AltoTensor, rank: int, **kwargs) -> ExecutionPlan:
@@ -719,9 +869,12 @@ def resident_bytes(at: AltoTensor,
     def nbytes(a) -> int:
         return int(a.size) * a.dtype.itemsize
 
+    from repro.core.stream import HostStream
     total = (nbytes(at.words) + nbytes(at.values)
              + nbytes(at.part_start) + nbytes(at.part_end))
     for v in (views or {}).values():
+        if isinstance(v, HostStream):
+            continue        # host-resident by design, not device bytes
         total += (nbytes(v.rows) + nbytes(v.words) + nbytes(v.values)
                   + nbytes(v.perm))
     return total
@@ -740,6 +893,10 @@ def execute_mttkrp(plan: ExecutionPlan, at: AltoTensor,
     no view was materialized (same contract as `mttkrp_adaptive`).
     Mesh-bearing plans route to the sharded oriented merge in
     `repro.dist.cpd` (shard-local reduction + psum carry merge).
+    Streaming plans route to the out-of-core chunked executors
+    (`kernels.ops`), which consume the host-resident stream
+    (`core.stream.HostStream`) that `build_views` materialized in place
+    of a device view.
     """
     if plan.mesh is not None:
         from repro.dist import cpd as dist_cpd
@@ -747,6 +904,15 @@ def execute_mttkrp(plan: ExecutionPlan, at: AltoTensor,
     mp = plan.modes[mode]
     oriented = (heuristics.is_oriented(mp.traversal)
                 and views is not None and mode in views)
+    if plan.streaming is not None and oriented:
+        from repro.kernels import ops
+        if plan.backend == "pallas":
+            return ops.mttkrp_oriented_chunked(
+                views[mode], factors, chunk_m=plan.streaming.chunk_m,
+                block_m=mp.block_m, r_block=mp.r_block,
+                interpret=plan.interpret)
+        return ops.mttkrp_oriented_chunked_reference(
+            views[mode], factors, chunk_m=plan.streaming.chunk_m)
     if plan.backend == "pallas":
         from repro.kernels import ops
         if oriented:
@@ -771,11 +937,17 @@ def execute_mttkrp(plan: ExecutionPlan, at: AltoTensor,
 def execute_phi(plan: ExecutionPlan, at: AltoTensor,
                 view: OrientedView | None, B: jnp.ndarray, mode: int,
                 factors=None, pi: jnp.ndarray | None = None,
-                eps: float = 1e-10) -> jnp.ndarray:
+                eps: float = 1e-10, pre: bool | None = None) -> jnp.ndarray:
     """CP-APR Φ row reduction through the plan's kernel choice.
 
     Pass ``pi`` (view/ALTO-ordered Khatri-Rao rows) for ALTO-PRE or
     ``factors`` for ALTO-OTF — exactly one, as in `kernels.cpapr_phi`.
+
+    Streaming plans take ``factors`` under BOTH Π policies (a full-stream
+    Π is exactly the array streaming avoids; the chunked executor builds
+    each chunk's Π rows on device under PRE) — ``pre`` then selects the
+    policy explicitly, defaulting to the plan's. ``pre`` is ignored on
+    in-core routes, where the pi-vs-factors operand already encodes it.
     """
     if (pi is None) == (factors is None):
         raise ValueError("pass exactly one of pi= / factors=")
@@ -786,6 +958,22 @@ def execute_phi(plan: ExecutionPlan, at: AltoTensor,
     mp = plan.modes[mode]
     oriented = (heuristics.is_oriented(mp.traversal)
                 and view is not None)
+    if plan.streaming is not None and oriented:
+        from repro.kernels import ops
+        if factors is None:
+            raise ValueError("streaming Φ needs factors= — chunk Π rows "
+                             "are built on device per chunk, never as a "
+                             "full-stream pi= operand")
+        pre_flag = (pre if pre is not None
+                    else plan.pi_policy is heuristics.PiPolicy.PRE)
+        if plan.backend == "pallas":
+            return ops.cpapr_phi_oriented_chunked(
+                view, B, factors, pre=pre_flag, eps=eps,
+                chunk_m=plan.streaming.chunk_m, block_m=mp.block_m,
+                interpret=plan.interpret)
+        return ops.cpapr_phi_oriented_chunked_reference(
+            view, B, factors, pre=pre_flag, eps=eps,
+            chunk_m=plan.streaming.chunk_m)
     if plan.backend == "pallas":
         from repro.kernels import ops
         if oriented:

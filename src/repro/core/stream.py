@@ -1,0 +1,197 @@
+"""Host-resident ALTO streams for out-of-core (chunked) execution.
+
+The in-core oriented path (`core.views`) keeps one device-resident
+row-sorted copy of the stream per (tensor, mode). For tensors whose
+padded stream does not fit the device byte budget (`core.plan`'s
+streaming decision) the same copy lives HERE instead: host numpy arrays
+— optionally memory-mapped from disk — that the chunked executors in
+`kernels.ops` slice into row-sorted chunks and feed through device
+memory with double-buffered `jax.device_put` prefetch.
+
+Contracts that make chunking bitwise-exact against the in-core
+`oriented_carry` kernels:
+
+* **Same element order.** `host_stream` builds the oriented permutation
+  with the identical extract + stable-argsort the in-core builders use
+  (`alto.oriented_view` / `oriented_view_device` are bit-identical to
+  each other; this is the same numpy path), so element k of the host
+  stream is element k of the in-core view.
+
+* **Same padding rule.** The stream is padded once, host-side, to a
+  multiple of :data:`STREAM_ALIGN` with `ops.pad_sorted_stream`'s rule —
+  replicated final row/words, zero values (an empty stream pads with
+  zero rows/words). ``STREAM_ALIGN`` (1024, == ``plan.MAX_BLOCK_M``) is
+  a multiple of every legal ``block_m``, and the padded prefix of length
+  ``ceil(Mp/block_m)·block_m`` is element-for-element what
+  `ops.pad_sorted_stream` would have produced at that ``block_m`` —
+  replicated padding is self-similar under truncation. Chunk slicing at
+  ``block_m`` multiples therefore cuts the exact block sequence the
+  in-core kernel scans.
+
+* **Zero-copy slices.** :meth:`HostStream.chunk` returns numpy views
+  (no copy); `jax.device_put` on the slice is the only transfer. Numpy
+  refcounting keeps a slice's backing buffer alive even if the cache
+  entry that produced it is evicted mid-flight — the no-use-after-evict
+  property `tests/test_outofcore.py` pins.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pathlib
+
+import jax
+import numpy as np
+
+from repro.core import encoding as enc_mod
+from repro.core.alto import AltoMeta, AltoTensor, OrientedView
+
+# One alignment for every host stream: a multiple of every legal oriented
+# block_m (powers of two in [plan.MIN_BLOCK_M, plan.MAX_BLOCK_M]), so one
+# padded copy serves any tiling. Must equal plan.MAX_BLOCK_M.
+STREAM_ALIGN = 1024
+
+
+@dataclasses.dataclass
+class HostStream:
+    """One (tensor, mode) row-sorted stream, host-resident and pre-padded.
+
+    ``length`` is the real (partition-padded) stream length Mp; the
+    arrays extend to the next :data:`STREAM_ALIGN` multiple with
+    replicated-row / zero-value padding. ``rows`` is int32 ascending,
+    ``words`` is (La, W) uint32, ``values`` matches the tensor dtype.
+    Arrays may be plain numpy or read-only ``np.memmap`` (disk-backed).
+    """
+    meta: AltoMeta
+    mode: int
+    length: int
+    rows: np.ndarray
+    words: np.ndarray
+    values: np.ndarray
+
+    def padded_len(self, block_m: int) -> int:
+        """Stream length after `ops.pad_sorted_stream` at ``block_m``."""
+        if STREAM_ALIGN % block_m:
+            raise ValueError(f"block_m {block_m} does not divide "
+                             f"STREAM_ALIGN {STREAM_ALIGN}")
+        return -(-self.length // block_m) * block_m
+
+    def chunk(self, start: int, stop: int):
+        """Zero-copy (rows, words, values) numpy views of [start, stop)."""
+        return (self.rows[start:stop], self.words[start:stop],
+                self.values[start:stop])
+
+    def nbytes(self) -> int:
+        return int(self.rows.nbytes + self.words.nbytes
+                   + self.values.nbytes)
+
+
+def pad_host_stream(rows: np.ndarray, words: np.ndarray,
+                    values: np.ndarray, mult: int):
+    """Numpy twin of `ops.pad_sorted_stream` (single padding rule).
+
+    Replicates the final row/words with zero values so padded elements
+    contribute nothing; an empty stream pads one full ``mult`` block of
+    zero rows/words (still sorted, still value-0).
+    """
+    M = words.shape[0]
+    pad = mult if M == 0 else (-M) % mult
+    if pad == 0:
+        return rows, words, values
+    if M == 0:
+        pad_rows = np.zeros((pad,), rows.dtype)
+        pad_words = np.zeros((pad, words.shape[1]), words.dtype)
+    else:
+        pad_rows = np.broadcast_to(rows[-1:], (pad,))
+        pad_words = np.broadcast_to(words[-1:], (pad, words.shape[1]))
+    rows = np.concatenate([rows, pad_rows])
+    words = np.concatenate([words, pad_words])
+    values = np.concatenate([values, np.zeros((pad,), values.dtype)])
+    return rows, words, values
+
+
+def host_stream(at: AltoTensor, mode: int) -> HostStream:
+    """Build the host-resident oriented stream for ``(at, mode)``.
+
+    Same extract + stable argsort as `alto.oriented_view`, kept in numpy
+    end to end (no device round-trip for the sorted copy), then padded
+    once to the :data:`STREAM_ALIGN` multiple.
+    """
+    words_np = np.asarray(at.words)
+    values_np = np.asarray(at.values)
+    rows = enc_mod.extract_mode(at.meta.enc, words_np, mode)
+    order = np.argsort(rows, kind="stable")
+    rows = np.ascontiguousarray(rows[order].astype(np.int32))
+    words = np.ascontiguousarray(words_np[order])
+    values = np.ascontiguousarray(values_np[order])
+    length = words.shape[0]
+    rows, words, values = pad_host_stream(rows, words, values, STREAM_ALIGN)
+    return HostStream(meta=at.meta, mode=mode, length=length,
+                      rows=np.ascontiguousarray(rows),
+                      words=np.ascontiguousarray(words),
+                      values=np.ascontiguousarray(values))
+
+
+def ensure_host(view) -> HostStream:
+    """Adapt an in-core `OrientedView` (or pass through a HostStream).
+
+    Lets the chunked executors accept either representation — tests and
+    benchmarks chunk existing device views without rebuilding.
+    """
+    if isinstance(view, HostStream):
+        return view
+    if isinstance(view, OrientedView):
+        rows = np.asarray(view.rows)
+        words = np.asarray(view.words)
+        values = np.asarray(view.values)
+        length = words.shape[0]
+        rows, words, values = pad_host_stream(rows, words, values,
+                                              STREAM_ALIGN)
+        return HostStream(meta=view.meta, mode=view.mode, length=length,
+                          rows=rows, words=words, values=values)
+    raise TypeError(f"expected HostStream or OrientedView, got "
+                    f"{type(view).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Disk backing (optional): .npy files re-opened as read-only memmaps
+# ---------------------------------------------------------------------------
+
+def to_memmap(hs: HostStream, directory) -> HostStream:
+    """Spill ``hs`` to ``directory`` and reopen it memory-mapped.
+
+    Writes ``rows/words/values`` as ``.npy`` plus the real length, and
+    returns a HostStream whose arrays are read-only ``np.memmap`` views —
+    the OS pages chunks in as the executors slice them, so the host
+    working set is bounded by the touched chunks, not the stream.
+    """
+    d = pathlib.Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    np.save(d / "rows.npy", np.asarray(hs.rows))
+    np.save(d / "words.npy", np.asarray(hs.words))
+    np.save(d / "values.npy", np.asarray(hs.values))
+    np.save(d / "length.npy", np.asarray([hs.length], np.int64))
+    return from_memmap(d, hs.meta, hs.mode)
+
+
+def from_memmap(directory, meta: AltoMeta, mode: int) -> HostStream:
+    """Reopen a spilled stream (`to_memmap`) as read-only memmaps."""
+    d = pathlib.Path(directory)
+    length = int(np.load(d / "length.npy")[0])
+    return HostStream(meta=meta, mode=mode, length=length,
+                      rows=np.load(d / "rows.npy", mmap_mode="r"),
+                      words=np.load(d / "words.npy", mmap_mode="r"),
+                      values=np.load(d / "values.npy", mmap_mode="r"))
+
+
+def put_chunk(hs: HostStream, start: int, stop: int):
+    """Upload one chunk to device: (rows, words, values) jax arrays.
+
+    `jax.device_put` on the zero-copy numpy slices; on accelerator
+    backends the transfers are dispatched asynchronously, so issuing the
+    NEXT chunk's put before computing on the current one overlaps copy
+    with compute (the double-buffer loop in `kernels.ops`).
+    """
+    rows, words, values = hs.chunk(start, stop)
+    return (jax.device_put(rows), jax.device_put(words),
+            jax.device_put(values))

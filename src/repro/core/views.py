@@ -49,7 +49,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import alto
+from repro.core import stream as stream_mod
 from repro.core.alto import AltoTensor, OrientedView
+from repro.core.stream import HostStream
 
 DEFAULT_CACHE_SIZE = 64
 DEFAULT_CACHE_BYTES = 2 * 1024 ** 3
@@ -81,7 +83,12 @@ def _limits() -> tuple[int, int]:
                                DEFAULT_CACHE_BYTES)))
 
 
-def _view_bytes(v: OrientedView) -> int:
+def _view_bytes(v) -> int:
+    """Approximate resident bytes of a cache entry — device `OrientedView`
+    or host `core.stream.HostStream` (both count against the byte bound;
+    a host stream is still an O(nnz) copy of the tensor)."""
+    if isinstance(v, HostStream):
+        return v.nbytes()
     return sum(int(a.size) * a.dtype.itemsize
                for a in (v.rows, v.words, v.values, v.perm))
 
@@ -113,19 +120,17 @@ def fingerprint(at: AltoTensor) -> tuple:
     return fp
 
 
-def get_view(at: AltoTensor, mode: int,
-             route: str | None = None) -> OrientedView:
-    """The oriented view for ``(at, mode)``: cached, built on miss.
+def _get_or_build(key: tuple, build):
+    """Latched cache lookup shared by `get_view` and `get_stream`.
 
     Thread-safe with per-key build latches (double-checked): the first
     thread to miss a key registers a pending event under the global lock,
-    builds the O(nnz) view *outside* it, then re-acquires to insert and
-    release waiters. Concurrent misses on the SAME key wait on the event
-    (one build per key — `cache_stats` keeps that assertable), while a
-    hit — or a miss — on any OTHER key proceeds immediately instead of
-    blocking behind an unrelated tenant's build.
+    runs the O(nnz) ``build`` *outside* it, then re-acquires to insert
+    and release waiters. Concurrent misses on the SAME key wait on the
+    event (one build per key — `cache_stats` keeps that assertable),
+    while a hit — or a miss — on any OTHER key proceeds immediately
+    instead of blocking behind an unrelated tenant's build.
     """
-    key = (fingerprint(at), int(mode))
     while True:
         with _LOCK:
             view = _CACHE.get(key)
@@ -146,9 +151,7 @@ def get_view(at: AltoTensor, mode: int,
             event.wait()
             continue
         try:
-            route_ = route or default_route()
-            view = (alto.oriented_view_device(at, mode)
-                    if route_ == "device" else alto.oriented_view(at, mode))
+            view = build()
         except BaseException:
             with _LOCK:
                 _PENDING.pop(key).set()   # unblock waiters; one re-builds
@@ -166,12 +169,45 @@ def get_view(at: AltoTensor, mode: int,
         return view
 
 
-def build_views(at: AltoTensor, plan,
-                route: str | None = None) -> dict[int, OrientedView]:
+def get_view(at: AltoTensor, mode: int,
+             route: str | None = None) -> OrientedView:
+    """The oriented view for ``(at, mode)``: cached, built on miss
+    (per-key latched — see `_get_or_build`)."""
+    key = (fingerprint(at), int(mode))
+
+    def build():
+        route_ = route or default_route()
+        return (alto.oriented_view_device(at, mode)
+                if route_ == "device" else alto.oriented_view(at, mode))
+
+    return _get_or_build(key, build)
+
+
+def get_stream(at: AltoTensor, mode: int) -> HostStream:
+    """The HOST-resident stream for ``(at, mode)``: cached, built on miss.
+
+    Same cache, latches, counters, and LRU byte/entry bounds as
+    `get_view`, under a key tagged "stream" so a tensor decomposed both
+    in-core and out-of-core keeps the two representations distinct.
+    Eviction is safe mid-flight: the chunked executors slice the numpy
+    arrays zero-copy, and numpy refcounting keeps a slice's backing
+    buffer alive after the cache entry is dropped (no use-after-evict —
+    pinned by `tests/test_outofcore.py`).
+    """
+    key = (fingerprint(at), int(mode), "stream")
+    return _get_or_build(key, lambda: stream_mod.host_stream(at, mode))
+
+
+def build_views(at: AltoTensor, plan, route: str | None = None) -> dict:
     """Cached views for exactly the modes ``plan`` routes oriented
     (either variant — one-hot merge or scratch carry — consumes the same
-    row-sorted view)."""
+    row-sorted view). A STREAMING plan materializes host-resident
+    `core.stream.HostStream`s instead of device views — same cache, same
+    one-build-per-key contract — which the chunked executors consume."""
     from repro.core import heuristics
+    if getattr(plan, "streaming", None) is not None:
+        return {m.mode: get_stream(at, m.mode)
+                for m in plan.modes if heuristics.is_oriented(m.traversal)}
     return {m.mode: get_view(at, m.mode, route=route)
             for m in plan.modes if heuristics.is_oriented(m.traversal)}
 

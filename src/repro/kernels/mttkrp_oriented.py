@@ -251,7 +251,8 @@ def phi_oriented_partials_pallas(enc: AltoEncoding, mode: int, eps: float,
 # Scratch-carry sequential-grid variant (no partials buffer, no host merge)
 # ---------------------------------------------------------------------------
 
-def _carry_step(b, n_blocks, rows, contrib, out_ref, crow_ref, cval_ref):
+def _carry_step(b, n_blocks, rows, contrib, out_ref, crow_ref, cval_ref,
+                carry_in=None, final=True, carry_out=None):
     """One grid step of the scratch-carry scan, shared by MTTKRP and Φ.
 
     ``b`` is the position along the sequential block axis. In-block
@@ -262,13 +263,28 @@ def _carry_step(b, n_blocks, rows, contrib, out_ref, crow_ref, cval_ref):
     the previous step either merges into this block's first run (same
     row) or is flushed — commutative re-association only, so the chain
     reproduces `ops.segment_merge`'s block-ordered adds bitwise.
+
+    Out-of-core extension (`core.plan` streaming): the scan can start
+    and stop mid-stream. ``carry_in`` is ``None`` for a fresh scan
+    (empty carry: row −1, zero value) or ``(row_ref, val_ref)`` holding
+    the open run handed in from the previous chunk; ``final`` is
+    statically False for non-final chunks, which suppresses the
+    stream-closing flush — the last block's open run exits through
+    ``carry_out`` ``(row_ref, val_ref)`` instead. A non-final last block
+    scatters the same masked zero to row 0 the in-core kernel's
+    non-last blocks do, so the chunked op sequence is identical
+    add-for-add to the in-core scan and parity stays bitwise.
     """
     block_m = rows.shape[0]
 
     @pl.when(b == 0)
-    def _():                                   # fresh scan: empty carry
-        crow_ref[0] = -1
-        cval_ref[...] = jnp.zeros(cval_ref.shape, cval_ref.dtype)
+    def _():
+        if carry_in is None:                   # fresh scan: empty carry
+            crow_ref[0] = -1
+            cval_ref[...] = jnp.zeros(cval_ref.shape, cval_ref.dtype)
+        else:                                  # resume the previous chunk
+            crow_ref[0] = carry_in[0][0]
+            cval_ref[...] = carry_in[1][...]
 
     prev_row = crow_ref[0]
     prev_val = cval_ref[0]
@@ -287,9 +303,15 @@ def _carry_step(b, n_blocks, rows, contrib, out_ref, crow_ref, cval_ref):
 
     new_val = jax.lax.dynamic_index_in_dim(seg_sums, n_segs - 1, 0,
                                            keepdims=False)
-    last = b == n_blocks - 1
-    fin_row = jnp.where(last, rows[block_m - 1], 0)   # close the stream
-    fin_val = jnp.where(last, new_val, zero)
+    if final:
+        last = b == n_blocks - 1
+        fin_row = jnp.where(last, rows[block_m - 1], 0)  # close the stream
+        fin_val = jnp.where(last, new_val, zero)
+    else:
+        # The stream continues into the next chunk: every block behaves
+        # like an in-core non-last block (masked zero to row 0).
+        fin_row = jnp.zeros((), jnp.int32)
+        fin_val = zero
 
     # Closed runs + (up to) two carry flushes, one combined scatter-add
     # into the resident output; masked slots add 0.0 to row 0, harmless.
@@ -303,6 +325,9 @@ def _carry_step(b, n_blocks, rows, contrib, out_ref, crow_ref, cval_ref):
 
     crow_ref[0] = rows[block_m - 1]
     cval_ref[0] = new_val
+    if carry_out is not None:
+        carry_out[0][0] = rows[block_m - 1]
+        carry_out[1][0] = new_val
 
 
 def _mttkrp_carry_kernel(enc: AltoEncoding, mode: int,
@@ -455,6 +480,219 @@ def phi_oriented_carry_pallas(enc: AltoEncoding, mode: int, eps: float,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((I_n, R), lambda b: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((I_n, R), B.dtype),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32),
+                        pltpu.VMEM((1, R), B.dtype)],
+        input_output_aliases={init_idx: 0},
+        interpret=interpret,
+    )(*args)
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core chunk kernels: the carry scan sliced mid-stream
+# ---------------------------------------------------------------------------
+#
+# One chunk = a block_m-multiple slice of the padded sorted stream. The
+# kernel is the carry scan above with three contract changes (all through
+# `_carry_step`'s carry_in/final/carry_out hooks):
+#
+#   * the output accumulator arrives as an INPUT (`out_init`, aliased onto
+#     the output) holding the previous chunks' accumulation — chunk 0 gets
+#     zeros, later chunks get the running (I_n, R);
+#   * the carry scratch is seeded from the previous chunk's carry-out
+#     (row −1 + zeros for chunk 0) instead of reset at b == 0;
+#   * a non-final chunk suppresses the stream-closing flush and emits its
+#     open run as (cout_row, cout_val) outputs for the next chunk.
+#
+# Because chunk boundaries sit on block boundaries of the SAME padded
+# stream, every block performs the identical combined scatter-add in the
+# identical order — chunked-vs-in-core parity is bitwise, not approximate
+# (`tests/test_outofcore.py` pins it on adversarial run layouts).
+
+def _mttkrp_carry_chunk_kernel(enc: AltoEncoding, mode: int, final: bool,
+                               rows_ref, words_ref, vals_ref,
+                               cin_row_ref, cin_val_ref, *refs):
+    """Grid step: (rank tile r, chunk block b) -> resident (I_n, rb)."""
+    factor_refs = refs[:-6]
+    out_ref = refs[-5]
+    cout_row_ref, cout_val_ref = refs[-4], refs[-3]
+    crow_ref, cval_ref = refs[-2], refs[-1]
+    # refs[-6] is the out accumulator aliased onto out_ref — never read.
+    rows = rows_ref[...]
+    words = words_ref[...]
+    vals = vals_ref[...]
+    coords = _decode(enc, words)
+
+    krp = None
+    fi = 0
+    for m in range(enc.ndim):
+        if m == mode:
+            continue
+        gathered = jnp.take(factor_refs[fi][...], coords[m], axis=0)
+        krp = gathered if krp is None else krp * gathered
+        fi += 1
+    contrib = vals[:, None] * krp              # (block_m, rb)
+
+    _carry_step(pl.program_id(1), pl.num_programs(1), rows, contrib,
+                out_ref, crow_ref, cval_ref,
+                carry_in=(cin_row_ref, cin_val_ref), final=final,
+                carry_out=(cout_row_ref, cout_val_ref))
+
+
+def mttkrp_oriented_carry_chunk_pallas(enc: AltoEncoding, mode: int,
+                                       rows: jnp.ndarray,
+                                       words: jnp.ndarray,
+                                       values: jnp.ndarray, factors,
+                                       out: jnp.ndarray,
+                                       carry_row: jnp.ndarray,
+                                       carry_val: jnp.ndarray,
+                                       block_m: int = DEFAULT_BLOCK_M,
+                                       r_block: int | None = None,
+                                       final: bool = True,
+                                       interpret: bool = True):
+    """One chunk of the scratch-carry MTTKRP scan.
+
+    ``rows/words/values`` are one block_m-multiple slice of the padded
+    sorted stream; ``out`` is the running (I_n, R) accumulator (zeros
+    for the first chunk); ``carry_row``/``carry_val`` — shapes (1,)
+    int32 / (1, R) — are the previous chunk's open run (row −1 + zeros
+    for the first). ``final`` statically marks the stream's last chunk
+    (only there does the open run flush into ``out``). Returns the
+    updated ``(out, carry_row, carry_val)``.
+    """
+    M, W = words.shape
+    if M % block_m:
+        raise ValueError(f"chunk {M} not a multiple of block_m {block_m}")
+    n_blocks = M // block_m
+    R = factors[0].shape[1]
+    rb = r_block or R
+    if R % rb:
+        raise ValueError(f"rank {R} not a multiple of r_block {rb}")
+    I_n = enc.dims[mode]
+    dtype = factors[0].dtype
+    others = [f for m, f in enumerate(factors) if m != mode]
+
+    in_specs = [
+        pl.BlockSpec((block_m,), lambda r, b: (b,)),           # rows
+        pl.BlockSpec((block_m, W), lambda r, b: (b, 0)),       # words
+        pl.BlockSpec((block_m,), lambda r, b: (b,)),           # values
+        pl.BlockSpec((1,), lambda r, b: (0,)),                 # carry row in
+        pl.BlockSpec((1, rb), lambda r, b: (0, r)),            # carry val in
+    ] + [
+        pl.BlockSpec((f.shape[0], rb), lambda r, b: (0, r)) for f in others
+    ] + [
+        pl.BlockSpec((I_n, rb), lambda r, b: (0, r)),          # out accum in
+    ]
+    return pl.pallas_call(
+        functools.partial(_mttkrp_carry_chunk_kernel, enc, mode, final),
+        grid=(R // rb, n_blocks),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((I_n, rb), lambda r, b: (0, r)),
+                   pl.BlockSpec((1,), lambda r, b: (0,)),
+                   pl.BlockSpec((1, rb), lambda r, b: (0, r))],
+        out_shape=[jax.ShapeDtypeStruct((I_n, R), dtype),
+                   jax.ShapeDtypeStruct((1,), jnp.int32),
+                   jax.ShapeDtypeStruct((1, R), dtype)],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32),
+                        pltpu.VMEM((1, rb), dtype)],
+        input_output_aliases={5 + len(others): 0},
+        interpret=interpret,
+    )(rows, words, values, carry_row, carry_val, *others, out)
+
+
+def _phi_carry_chunk_kernel(enc: AltoEncoding, mode: int, eps: float,
+                            pre_pi: bool, final: bool,
+                            rows_ref, words_ref, vals_ref, b_ref,
+                            cin_row_ref, cin_val_ref, *refs):
+    """Grid step: fused Φ + chunked carry scan, full rank."""
+    operand_refs = refs[:-6]                   # Π tile or other factors
+    out_ref = refs[-5]
+    cout_row_ref, cout_val_ref = refs[-4], refs[-3]
+    crow_ref, cval_ref = refs[-2], refs[-1]
+    rows = rows_ref[...]
+    vals = vals_ref[...]
+
+    if pre_pi:
+        krp = operand_refs[0][...]             # Π rows (block_m, R)
+    else:
+        coords = _decode(enc, words_ref[...])
+        krp = None
+        fi = 0
+        for m in range(enc.ndim):
+            if m == mode:
+                continue
+            gathered = jnp.take(operand_refs[fi][...], coords[m], axis=0)
+            krp = gathered if krp is None else krp * gathered
+            fi += 1
+
+    b_rows = jnp.take(b_ref[...], rows, axis=0)        # (block_m, R)
+    denom = jnp.maximum(jnp.sum(b_rows * krp, axis=-1), eps)
+    contrib = (vals / denom)[:, None] * krp
+
+    _carry_step(pl.program_id(0), pl.num_programs(0), rows, contrib,
+                out_ref, crow_ref, cval_ref,
+                carry_in=(cin_row_ref, cin_val_ref), final=final,
+                carry_out=(cout_row_ref, cout_val_ref))
+
+
+def phi_oriented_carry_chunk_pallas(enc: AltoEncoding, mode: int,
+                                    eps: float,
+                                    rows: jnp.ndarray, words: jnp.ndarray,
+                                    values: jnp.ndarray, B: jnp.ndarray,
+                                    out: jnp.ndarray,
+                                    carry_row: jnp.ndarray,
+                                    carry_val: jnp.ndarray,
+                                    factors=None,
+                                    pi: jnp.ndarray | None = None,
+                                    block_m: int = DEFAULT_BLOCK_M,
+                                    final: bool = True,
+                                    interpret: bool = True):
+    """One chunk of the scratch-carry fused Φ scan (full rank).
+
+    Operand contract as `phi_oriented_carry_pallas` (exactly one of
+    ``pi``/``factors``; under ALTO-PRE ``pi`` holds THIS CHUNK's Π rows);
+    chunk contract as `mttkrp_oriented_carry_chunk_pallas`. Returns the
+    updated ``(out, carry_row, carry_val)``.
+    """
+    pre_pi = pi is not None
+    if pre_pi == (factors is not None):
+        raise ValueError("pass exactly one of pi= / factors=")
+    M, W = words.shape
+    if M % block_m:
+        raise ValueError(f"chunk {M} not a multiple of block_m {block_m}")
+    n_blocks = M // block_m
+    I_n, R = B.shape
+
+    in_specs = [
+        pl.BlockSpec((block_m,), lambda b: (b,)),              # rows
+        pl.BlockSpec((block_m, W), lambda b: (b, 0)),          # words
+        pl.BlockSpec((block_m,), lambda b: (b,)),              # values
+        pl.BlockSpec(B.shape, lambda b: (0, 0)),               # B resident
+        pl.BlockSpec((1,), lambda b: (0,)),                    # carry row in
+        pl.BlockSpec((1, R), lambda b: (0, 0)),                # carry val in
+    ]
+    args = [rows, words, values, B, carry_row, carry_val]
+    if pre_pi:
+        in_specs.append(pl.BlockSpec((block_m, R), lambda b: (b, 0)))
+        args.append(pi)
+    else:
+        others = [f for m, f in enumerate(factors) if m != mode]
+        in_specs += [pl.BlockSpec(f.shape, lambda b: (0, 0)) for f in others]
+        args += others
+    init_idx = len(args)
+    in_specs.append(pl.BlockSpec((I_n, R), lambda b: (0, 0)))  # out accum
+    args.append(out)
+
+    return pl.pallas_call(
+        functools.partial(_phi_carry_chunk_kernel, enc, mode, eps, pre_pi,
+                          final),
+        grid=(n_blocks,),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((I_n, R), lambda b: (0, 0)),
+                   pl.BlockSpec((1,), lambda b: (0,)),
+                   pl.BlockSpec((1, R), lambda b: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((I_n, R), B.dtype),
+                   jax.ShapeDtypeStruct((1,), jnp.int32),
+                   jax.ShapeDtypeStruct((1, R), B.dtype)],
         scratch_shapes=[pltpu.SMEM((1,), jnp.int32),
                         pltpu.VMEM((1, R), B.dtype)],
         input_output_aliases={init_idx: 0},

@@ -30,8 +30,11 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import stream as _stream
 from repro.core.alto import AltoTensor, OrientedView
+from repro.core.alto import delinearize as _delin_jnp
 from repro.core.encoding import AltoEncoding
+from repro.core.mttkrp import krp_rows as _krp_rows
 from repro.kernels import cpapr_phi as _phi
 from repro.kernels import delinearize as _delin
 from repro.kernels import mttkrp as _mttkrp
@@ -391,3 +394,238 @@ def cpapr_phi_oriented_carry(view: OrientedView, B: jnp.ndarray,
         ("phi_carry", meta, mode, eps, pre_pi, block_m, interp), build)
     return fn(view.rows, view.words, view.values, B,
               list(factors) if factors is not None else None, pi)
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core chunked executors (host stream -> device, cross-chunk carry)
+# ---------------------------------------------------------------------------
+#
+# The host loop that drives the chunk kernels in `mttkrp_oriented`: a
+# `core.stream.HostStream` is sliced at block_m-aligned chunk boundaries
+# and each chunk flows through ONE cached per-chunk-shape jitted
+# executable, threading (out, carry_row, carry_val) from chunk to chunk.
+# Double buffering: the NEXT chunk's `device_put` is dispatched before the
+# current chunk's compute (async on accelerator backends, so copy overlaps
+# compute; on the CPU test host it is a plain copy — `docs/known-issues.md`
+# carries the timing caveat). At most two chunk lengths exist per stream
+# (the full chunk_m and one shorter tail), so the executable cache holds
+# at most 2 entries per (meta, mode, tiling) — not one per chunk.
+
+_CHUNK_STATS = {"chunks": 0, "prefetches": 0}
+
+
+def chunk_stats() -> dict[str, int]:
+    """Chunk-executor counters: chunks executed, prefetch puts issued.
+
+    `tests/test_outofcore.py` uses the delta to pin "modeled chunk count
+    == executed grid"; `bench_outofcore` reports overlap efficiency."""
+    with _OPS_LOCK:
+        return dict(_CHUNK_STATS)
+
+
+def chunk_stats_clear() -> None:
+    with _OPS_LOCK:
+        for k in _CHUNK_STATS:
+            _CHUNK_STATS[k] = 0
+
+
+def _chunk_bounds(padded_len: int, chunk_m: int) -> list[tuple[int, int]]:
+    """Chunk slice bounds over the padded stream (last may be shorter)."""
+    return [(s, min(s + chunk_m, padded_len))
+            for s in range(0, padded_len, chunk_m)]
+
+
+def _bump(counter: str, n: int = 1) -> None:
+    with _OPS_LOCK:
+        _CHUNK_STATS[counter] += n
+
+
+def mttkrp_oriented_chunked(view, factors, *, chunk_m: int,
+                            block_m: int = _oriented.DEFAULT_BLOCK_M,
+                            r_block: int | None = None,
+                            interpret: bool | None = None) -> jnp.ndarray:
+    """Out-of-core scratch-carry MTTKRP: host stream -> (I_n, R).
+
+    ``view`` is a `core.stream.HostStream` (or an in-core `OrientedView`,
+    adapted on the fly). Bitwise-identical to `mttkrp_oriented_carry` at
+    equal tiling: chunk boundaries sit on block boundaries of the same
+    padded stream and the open run rides the carry chain across them.
+    """
+    hs = _stream.ensure_host(view)
+    meta, mode = hs.meta, hs.mode
+    interp = _auto_interpret(interpret)
+    R = factors[0].shape[1]
+    rb = r_block or R
+    if chunk_m % block_m:
+        raise ValueError(f"chunk_m {chunk_m} not a multiple of "
+                         f"block_m {block_m}")
+    bounds = _chunk_bounds(hs.padded_len(block_m), chunk_m)
+    I_n = meta.dims[mode]
+    dtype = factors[0].dtype
+    factors = [jnp.asarray(f) for f in factors]
+    out = jnp.zeros((I_n, R), dtype)
+    crow = jnp.full((1,), -1, jnp.int32)
+    cval = jnp.zeros((1, R), dtype)
+
+    nxt = _stream.put_chunk(hs, *bounds[0])
+    for i, (s, e) in enumerate(bounds):
+        cur = nxt
+        if i + 1 < len(bounds):                # prefetch ahead of compute
+            nxt = _stream.put_chunk(hs, *bounds[i + 1])
+            _bump("prefetches")
+        final = i == len(bounds) - 1
+
+        def build(chunk_len=e - s, final=final):
+            def run(rows, words, values, factors, out, crow, cval):
+                return _oriented.mttkrp_oriented_carry_chunk_pallas(
+                    meta.enc, mode, rows, words, values, factors,
+                    out, crow, cval, block_m=block_m, r_block=rb,
+                    final=final, interpret=interp)
+            return jax.jit(run)
+
+        fn = _cached_executable(
+            ("mttkrp_chunk", meta, mode, e - s, block_m, rb, final, interp),
+            build)
+        out, crow, cval = fn(*cur, factors, out, crow, cval)
+        _bump("chunks")
+    return out
+
+
+def mttkrp_oriented_chunked_reference(view, factors, *,
+                                      chunk_m: int) -> jnp.ndarray:
+    """Reference-backend chunked MTTKRP: per-chunk jnp scatter-add.
+
+    Same host loop and `device_put` prefetch as the Pallas executor, but
+    each chunk is a plain delinearize + Khatri-Rao + ``at[].add``. Not
+    bitwise against the in-core reference `segment_sum` (different
+    reduction association); agrees to float tolerance.
+    """
+    hs = _stream.ensure_host(view)
+    meta, mode = hs.meta, hs.mode
+    R = factors[0].shape[1]
+    bounds = _chunk_bounds(hs.padded_len(1), chunk_m)
+    dtype = factors[0].dtype
+    factors = [jnp.asarray(f) for f in factors]
+    out = jnp.zeros((meta.dims[mode], R), dtype)
+
+    nxt = _stream.put_chunk(hs, *bounds[0])
+    for i, (s, e) in enumerate(bounds):
+        cur = nxt
+        if i + 1 < len(bounds):
+            nxt = _stream.put_chunk(hs, *bounds[i + 1])
+            _bump("prefetches")
+
+        def build(chunk_len=e - s):
+            def run(rows, words, values, factors, out):
+                coords = _delin_jnp(meta.enc, words)
+                krp = _krp_rows(coords, factors, mode)
+                return out.at[rows].add(values[:, None] * krp)
+            return jax.jit(run)
+
+        fn = _cached_executable(
+            ("mttkrp_ref_chunk", meta, mode, e - s), build)
+        out = fn(*cur, factors, out)
+        _bump("chunks")
+    return out
+
+
+def cpapr_phi_oriented_chunked(view, B: jnp.ndarray, factors, *,
+                               pre: bool, eps: float = 1e-10,
+                               chunk_m: int,
+                               block_m: int = _oriented.DEFAULT_BLOCK_M,
+                               interpret: bool | None = None
+                               ) -> jnp.ndarray:
+    """Out-of-core scratch-carry fused Φ: host stream -> (I_n, R).
+
+    Streaming takes ``factors`` under BOTH Π policies — a precomputed
+    full-stream Π is exactly the O(nnz·R) array streaming exists to
+    avoid. Under ``pre=True`` each chunk's Π rows are built on device
+    inside the per-chunk executable and fed to the ALTO-PRE kernel
+    (elementwise-identical to slicing a precomputed Π, so parity with
+    the in-core PRE path stays bitwise for CP-APR's non-negative
+    factors); ``pre=False`` is plain ALTO-OTF per chunk. The policy's
+    cost meaning shifts under streaming: PRE's once-per-outer-iteration
+    precompute becomes a per-chunk recompute (`docs/out-of-core.md`).
+    """
+    hs = _stream.ensure_host(view)
+    meta, mode = hs.meta, hs.mode
+    interp = _auto_interpret(interpret)
+    if chunk_m % block_m:
+        raise ValueError(f"chunk_m {chunk_m} not a multiple of "
+                         f"block_m {block_m}")
+    bounds = _chunk_bounds(hs.padded_len(block_m), chunk_m)
+    I_n, R = B.shape
+    B = jnp.asarray(B)
+    factors = [jnp.asarray(f) for f in factors]
+    out = jnp.zeros((I_n, R), B.dtype)
+    crow = jnp.full((1,), -1, jnp.int32)
+    cval = jnp.zeros((1, R), B.dtype)
+
+    nxt = _stream.put_chunk(hs, *bounds[0])
+    for i, (s, e) in enumerate(bounds):
+        cur = nxt
+        if i + 1 < len(bounds):
+            nxt = _stream.put_chunk(hs, *bounds[i + 1])
+            _bump("prefetches")
+        final = i == len(bounds) - 1
+
+        def build(chunk_len=e - s, final=final):
+            def run(rows, words, values, B, factors, out, crow, cval):
+                if pre:
+                    coords = _delin_jnp(meta.enc, words)
+                    pi = _krp_rows(coords, factors, mode)
+                    return _oriented.phi_oriented_carry_chunk_pallas(
+                        meta.enc, mode, eps, rows, words, values, B,
+                        out, crow, cval, pi=pi, block_m=block_m,
+                        final=final, interpret=interp)
+                return _oriented.phi_oriented_carry_chunk_pallas(
+                    meta.enc, mode, eps, rows, words, values, B,
+                    out, crow, cval, factors=factors, block_m=block_m,
+                    final=final, interpret=interp)
+            return jax.jit(run)
+
+        fn = _cached_executable(
+            ("phi_chunk", meta, mode, eps, pre, e - s, block_m, final,
+             interp), build)
+        out, crow, cval = fn(*cur, B, factors, out, crow, cval)
+        _bump("chunks")
+    return out
+
+
+def cpapr_phi_oriented_chunked_reference(view, B: jnp.ndarray, factors, *,
+                                         pre: bool, eps: float = 1e-10,
+                                         chunk_m: int) -> jnp.ndarray:
+    """Reference-backend chunked Φ: per-chunk jnp row reduction.
+
+    Tolerance-level (not bitwise) against the in-core reference path,
+    like its MTTKRP sibling.
+    """
+    hs = _stream.ensure_host(view)
+    meta, mode = hs.meta, hs.mode
+    bounds = _chunk_bounds(hs.padded_len(1), chunk_m)
+    I_n, R = B.shape
+    B = jnp.asarray(B)
+    factors = [jnp.asarray(f) for f in factors]
+    out = jnp.zeros((I_n, R), B.dtype)
+
+    nxt = _stream.put_chunk(hs, *bounds[0])
+    for i, (s, e) in enumerate(bounds):
+        cur = nxt
+        if i + 1 < len(bounds):
+            nxt = _stream.put_chunk(hs, *bounds[i + 1])
+            _bump("prefetches")
+
+        def build(chunk_len=e - s):
+            def run(rows, words, values, B, factors, out):
+                coords = _delin_jnp(meta.enc, words)
+                krp = _krp_rows(coords, factors, mode)
+                denom = jnp.maximum(jnp.sum(B[rows] * krp, axis=-1), eps)
+                contrib = (values / denom)[:, None] * krp
+                return out.at[rows].add(contrib)
+            return jax.jit(run)
+
+        fn = _cached_executable(
+            ("phi_ref_chunk", meta, mode, eps, e - s), build)
+        out = fn(*cur, B, factors, out)
+        _bump("chunks")
+    return out

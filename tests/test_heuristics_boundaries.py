@@ -392,3 +392,120 @@ class TestOrientedVariantTrafficBoundary:
         assert heuristics.choose_oriented_variant(
             meta, 0, 16, carry_feasible=False) \
             is heuristics.Traversal.OUTPUT_ORIENTED
+
+
+class TestChunkByteModels:
+    """Byte-exact accounting of the out-of-core (HBM) chunk models and
+    the chunk-size choice they drive — mirrors TestCarryVmemFootprint:
+    every term is re-derived here by hand, so a silent model edit goes
+    red, not just a routing flip."""
+
+    def _meta(self, dims=(64, 48, 32), nnz=2000, L=4):
+        x = synthetic.uniform_tensor(dims, nnz, seed=0)
+        return alto.build(x, n_partitions=L).meta
+
+    def test_stream_elem_exact_bytes(self):
+        meta = self._meta()
+        for db in (4, 8):
+            want = (meta.enc.n_words * 4    # linearized index words
+                    + 4                     # row index (int32)
+                    + db)                   # value
+            assert plan_mod.stream_elem_bytes(meta, db) == want
+
+    def test_resident_exact_bytes(self):
+        meta = self._meta()
+        R, db = 8, 4
+        i_max = max(meta.dims)
+        want = (sum(meta.dims) * R * db     # all factors
+                + i_max * R * db            # worst-mode output accumulator
+                + i_max * R * db            # Φ's resident B operand
+                + 4 + R * db)               # carry (row, value) pair
+        assert plan_mod.streaming_resident_bytes(meta, R, db) == want
+
+    def test_incore_working_set_exact_bytes(self):
+        meta = self._meta()
+        R, db = 8, 4
+        want = (heuristics.stream_len(meta)
+                * plan_mod.stream_elem_bytes(meta, db)
+                + plan_mod.streaming_resident_bytes(meta, R, db))
+        assert plan_mod.incore_working_set_bytes(meta, R, db) == want
+
+    def test_chunk_hbm_exact_bytes(self):
+        """Two in-flight chunks (compute + prefetch) plus the residency."""
+        meta = self._meta()
+        R, db = 8, 4
+        for chunk_m in (64, 256, 1024):
+            want = (2 * chunk_m * plan_mod.stream_elem_bytes(meta, db)
+                    + plan_mod.streaming_resident_bytes(meta, R, db))
+            assert plan_mod.chunk_hbm_bytes(meta, chunk_m, R, db) == want
+
+    def test_needs_streaming_strict_boundary(self):
+        """Streaming triggers STRICTLY above the budget: a working set
+        exactly equal to device_bytes stays in-core."""
+        meta = self._meta()
+        ws = plan_mod.incore_working_set_bytes(meta, 8)
+        assert not plan_mod.needs_streaming(meta, 8, ws)
+        assert plan_mod.needs_streaming(meta, 8, ws - 1)
+        assert plan_mod.make_plan(meta, 8, device_bytes=ws).streaming \
+            is None
+        assert plan_mod.make_plan(meta, 8,
+                                  device_bytes=ws - 1).streaming \
+            is not None
+
+    def test_chosen_chunk_fits_budget_and_alignment(self):
+        """Above the advisory floor the chosen chunk's double-buffered
+        footprint fits the budget, sits on the alignment grid, and one
+        more alignment step would overflow."""
+        meta = self._meta()
+        R, align = 8, 64
+        resident = plan_mod.streaming_resident_bytes(meta, R)
+        elem = plan_mod.stream_elem_bytes(meta)
+        for chunks_worth in (2, 5, 11):
+            budget = resident + 2 * elem * (chunks_worth * align) + 1
+            cm = plan_mod.choose_chunk_m(meta, R, budget, align)
+            assert cm == chunks_worth * align
+            assert cm % align == 0
+            assert plan_mod.chunk_hbm_bytes(meta, cm, R) <= budget
+            assert plan_mod.chunk_hbm_bytes(meta, cm + align, R) > budget
+
+    def test_chunk_advisory_floor_and_stream_cap(self):
+        """Below the floor one aligned chunk is returned (advisory, like
+        the VMEM choosers); a huge budget caps at the aligned stream."""
+        meta = self._meta()
+        align = 64
+        assert plan_mod.choose_chunk_m(meta, 8, 0, align) == align
+        padded = -(-heuristics.stream_len(meta) // align) * align
+        assert plan_mod.choose_chunk_m(meta, 8, 1 << 50, align) == padded
+
+    def test_chunk_count_block_m_independent(self):
+        """n_chunks is a property of (stream, chunk_m), not of the block
+        padding: the executor's grid over the block_m-padded stream
+        matches the model for every block size dividing chunk_m."""
+        from repro.core import stream as stream_mod
+        x = synthetic.uniform_tensor((64, 48, 32), 2000, seed=0)
+        at = alto.build(x, n_partitions=4)
+        hs = stream_mod.host_stream(at, 0)
+        for chunk_m in (64, 128, 512):
+            want = plan_mod.chunk_count(at.meta, chunk_m)
+            for bm in (8, 16, 32, 64):
+                padded = hs.padded_len(bm)
+                executed = -(-padded // chunk_m)
+                assert executed == want, (chunk_m, bm)
+
+    def test_stream_plan_records_model_outputs(self):
+        """The StreamPlan on a streaming plan carries exactly the model
+        numbers: chunk from choose_chunk_m at the plan's alignment,
+        count from chunk_count, working set from the in-core model."""
+        meta = self._meta()
+        R = 8
+        budget = plan_mod.streaming_resident_bytes(meta, R) + 4096
+        plan = plan_mod.make_plan(meta, R, device_bytes=budget)
+        sp = plan.streaming
+        assert sp is not None
+        align = max(m.block_m for m in plan.modes)
+        assert sp.chunk_m == plan_mod.choose_chunk_m(meta, R, budget,
+                                                     align)
+        assert sp.n_chunks == plan_mod.chunk_count(meta, sp.chunk_m)
+        assert sp.device_bytes == budget
+        assert sp.stream_bytes == plan_mod.incore_working_set_bytes(
+            meta, R)
