@@ -1,0 +1,91 @@
+"""Incremental ingest: append latency vs full rebuild, warm vs cold.
+
+Rows (docs/dynamic-tensors.md):
+
+* ``incremental/append_us`` — one `ingest.append_delta` call (jit-warm)
+  merging a D-nonzero delta into an M-nonzero resident tensor; derived
+  column is the speedup over the full rebuild row;
+* ``incremental/rebuild_us`` — the baseline it replaces: host merge of
+  the COO + `build_device` from scratch;
+* ``incremental/warm_sweeps`` / ``incremental/cold_sweeps`` — CP-ALS
+  sweeps to converge on the appended tensor starting from the previous
+  result vs from scratch (derived column is the sweep count).
+
+Merge parity (device append bitwise == host `alto.merge_reference`) is
+asserted before anything is timed, so a broken merge can never post a
+fast number.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import alto, ingest
+from repro.core.cpals import cp_als
+from repro.sparse.tensor import SparseTensor
+
+
+def _lowrank(dims, rank, nnz, seed=0):
+    rng = np.random.default_rng(seed)
+    fac = [rng.uniform(0.1, 1.0, (d, rank)) for d in dims]
+    coords = np.stack([rng.integers(0, d, nnz) for d in dims], axis=1)
+    v = np.ones(nnz)
+    for m, A in enumerate(fac):
+        v = v * A[coords[:, m]].sum(axis=1)
+    return SparseTensor(tuple(dims), coords.astype(np.int32),
+                        v.astype(np.float32))
+
+
+def run(quick: bool = False) -> None:
+    dims = (64, 48, 40) if quick else (256, 192, 160)
+    nnz = 4_000 if quick else 40_000
+    D, L = 64, 8
+    x = _lowrank(dims, 4, nnz, seed=0)
+    at = alto.build_device(x, n_partitions=L)
+    rng = np.random.default_rng(1)
+    coords = np.stack([rng.integers(0, d, D) for d in dims],
+                      axis=1).astype(np.int32)
+    values = rng.standard_normal(D).astype(np.float32)
+
+    # Parity gate: no timing until the merge is proven bit-identical.
+    got = ingest.append_delta(at, coords, values)
+    ref = alto.merge_reference(at, coords, values)
+    assert got.meta == ref.meta
+    assert np.array_equal(np.asarray(got.words), np.asarray(ref.words))
+    assert np.array_equal(np.asarray(got.values), np.asarray(ref.values))
+
+    append_us = time_call(
+        lambda: ingest.append_delta(at, coords, values,
+                                    invalidate_stale=False))
+
+    def rebuild():
+        merged = alto.merge_coo(alto.to_sparse(at), coords, values)
+        return alto.build_device(merged, n_partitions=L)
+
+    rebuild_us = time_call(rebuild)
+    emit("incremental/append_us", append_us,
+         f"{rebuild_us / max(append_us, 1e-9):.1f}x_vs_rebuild")
+    emit("incremental/rebuild_us", rebuild_us, f"nnz={nnz}+{D}")
+
+    # Warm vs cold sweeps on a perturbed tensor (small fittable case so
+    # both converge inside the cap even under --quick).
+    wdims = (14, 12, 10)
+    wx = _lowrank(wdims, 3, 250, seed=0)
+    wat = alto.build_device(wx, n_partitions=4)
+    base = cp_als(wat, 3, n_iters=80, tol=1e-5, seed=1)
+    dc = np.stack([rng.integers(0, d, 6) for d in wdims],
+                  axis=1).astype(np.int32)
+    dv = (0.02 * rng.standard_normal(6)).astype(np.float32)
+    new_at = ingest.append_delta(wat, dc, dv)
+
+    warm_us = time_call(
+        lambda: cp_als(new_at, 3, n_iters=80, tol=1e-4, warm_start=base),
+        warmup=1, iters=2)
+    cold_us = time_call(
+        lambda: cp_als(new_at, 3, n_iters=80, tol=1e-4, seed=1),
+        warmup=1, iters=2)
+    warm = cp_als(new_at, 3, n_iters=80, tol=1e-4, warm_start=base)
+    cold = cp_als(new_at, 3, n_iters=80, tol=1e-4, seed=1)
+    assert warm.n_iters < cold.n_iters, (warm.n_iters, cold.n_iters)
+    emit("incremental/warm_sweeps", warm_us, f"sweeps={warm.n_iters}")
+    emit("incremental/cold_sweeps", cold_us, f"sweeps={cold.n_iters}")

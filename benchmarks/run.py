@@ -13,14 +13,14 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: mttkrp,cpapr,storage,format,"
                          "kernels,roofline,dist,autotune,carry,serving,"
-                         "outofcore")
+                         "outofcore,incremental")
     args = ap.parse_args()
 
     from benchmarks import (bench_autotune, bench_cpapr, bench_dist,
-                            bench_format_generation, bench_kernels,
-                            bench_mttkrp, bench_mttkrp_formats,
-                            bench_outofcore, bench_roofline,
-                            bench_serving, bench_storage)
+                            bench_format_generation, bench_incremental,
+                            bench_kernels, bench_mttkrp,
+                            bench_mttkrp_formats, bench_outofcore,
+                            bench_roofline, bench_serving, bench_storage)
 
     suites = {
         "mttkrp": bench_mttkrp_formats.run,      # paper Fig. 9
@@ -34,6 +34,7 @@ def main() -> None:
         "carry": bench_mttkrp.run,               # one-hot vs scratch-carry
         "serving": bench_serving.run,            # docs/serving.md
         "outofcore": bench_outofcore.run,        # docs/out-of-core.md
+        "incremental": bench_incremental.run,    # docs/dynamic-tensors.md
     }
     wanted = [s for s in args.only.split(",") if s] or list(suites)
 

@@ -4,9 +4,11 @@ from repro.core.encoding import AltoEncoding, make_encoding
 from repro.core.alto import (AltoTensor, AltoMeta, OrientedView, build,
                              build_device, oriented_view,
                              oriented_view_device, linearize, delinearize,
-                             to_sparse)
-from repro.core import (autotune, batched, heuristics, mttkrp, plan, cpals,
-                        cpapr, shapeclass, views)
+                             to_sparse, merge_coo, merge_reference,
+                             grown_dims)
+from repro.core import (autotune, batched, heuristics, ingest, mttkrp,
+                        plan, cpals, cpapr, shapeclass, stream, views)
+from repro.core.ingest import append_delta, append_linearized, grow_factors
 from repro.core.heuristics import Traversal
 from repro.core.plan import (ExecutionPlan, ModePlan, make_plan,
                              make_class_plan, resident_bytes)
@@ -19,8 +21,10 @@ __all__ = [
     "AltoEncoding", "make_encoding", "AltoTensor", "AltoMeta",
     "OrientedView", "build", "build_device", "oriented_view",
     "oriented_view_device", "linearize", "delinearize", "to_sparse",
-    "autotune", "batched", "heuristics", "mttkrp", "plan", "cpals",
-    "cpapr", "shapeclass", "views",
+    "merge_coo", "merge_reference", "grown_dims",
+    "autotune", "batched", "heuristics", "ingest", "mttkrp", "plan",
+    "cpals", "cpapr", "shapeclass", "stream", "views",
+    "append_delta", "append_linearized", "grow_factors",
     "Traversal", "ExecutionPlan", "ModePlan", "make_plan",
     "make_class_plan", "resident_bytes", "tune_plan",
     "ShapeClass", "classify", "pad_to_class",

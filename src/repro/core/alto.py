@@ -260,7 +260,7 @@ def oriented_view(at: AltoTensor, mode: int) -> OrientedView:
 _DEVICE_INGEST_FNS: "collections.OrderedDict[tuple, object]" = \
     collections.OrderedDict()
 _DEVICE_INGEST_FNS_MAX = 128
-_DEVICE_INGEST_TRACES = {"build": 0, "view": 0}
+_DEVICE_INGEST_TRACES = {"build": 0, "view": 0, "merge": 0}
 # Concurrent serving drivers ingest in parallel; the OrderedDict
 # move_to_end/popitem pair is not atomic, so guard all mutations.
 _DEVICE_INGEST_LOCK = threading.Lock()
@@ -407,3 +407,93 @@ def to_sparse(at: AltoTensor) -> SparseTensor:
     coords = np.asarray(at.coords())[:at.nnz]
     values = np.asarray(at.values)[:at.nnz]
     return SparseTensor(at.dims, coords, values)
+
+
+# ---------------------------------------------------------------------------
+# Incremental-ingest host reference (core.ingest's parity oracle)
+# ---------------------------------------------------------------------------
+
+MERGE_POLICIES = ("sum", "last")
+
+
+def grown_dims(dims: Sequence[int], coords,
+               override: Sequence[int] | None = None) -> tuple[int, ...]:
+    """Smallest extents covering ``dims`` and every delta coordinate.
+
+    ``override`` fixes the result explicitly (it must cover both); by
+    default extents grow exactly as far as the delta reaches. Extent
+    growth can change `make_encoding`'s bit assignment, which is why the
+    merge paths re-linearize the resident stream when the encoding
+    moves.
+    """
+    coords = np.asarray(coords)
+    need = list(int(d) for d in dims)
+    if coords.size:
+        mx = coords.reshape(-1, len(need)).max(axis=0)
+        need = [max(d, int(m) + 1) for d, m in zip(need, mx)]
+    if override is None:
+        return tuple(need)
+    out = tuple(int(d) for d in override)
+    if len(out) != len(need) or any(o < n for o, n in zip(out, need)):
+        raise ValueError(f"dims override {out} does not cover required "
+                         f"extents {tuple(need)}")
+    return out
+
+
+def merge_coo(x: SparseTensor, coords, values, policy: str = "sum",
+              dims: Sequence[int] | None = None) -> SparseTensor:
+    """The merged COO an append denotes: resident entries (in stream
+    order) followed by the delta batch (in input order), with the
+    duplicate policy applied over FULL coordinates (equal linearized
+    keys).
+
+    * ``"sum"`` — every entry is kept; after the key sort duplicates sit
+      adjacent and accumulate in every downstream reduction (exactly how
+      `build` already treats duplicate-coordinate COO input).
+    * ``"last"`` — the last-written entry of each duplicate group keeps
+      its value and every earlier one is masked to value 0. A pure mask
+      (no arithmetic), so the jitted merge reproduces it bit-for-bit;
+      value-0 entries are inert in MTTKRP/Φ/likelihood, and writing
+      value 0 acts as a delete.
+
+    The entry count is always ``x.nnz + len(values)``: compaction would
+    make the merged size data-dependent, which the static-shape jitted
+    merge core cannot express.
+    """
+    if policy not in MERGE_POLICIES:
+        raise ValueError(f"policy {policy!r}: expected one of "
+                         f"{MERGE_POLICIES}")
+    coords = np.asarray(coords, dtype=np.int32).reshape(-1, x.ndim)
+    values = np.asarray(values).astype(x.values.dtype, copy=False)
+    new_dims = grown_dims(x.dims, coords, dims)
+    all_c = np.concatenate([x.coords, coords], axis=0)
+    all_v = np.concatenate([x.values, values], axis=0)
+    if policy == "last" and all_v.shape[0] > 1:
+        enc = make_encoding(new_dims)
+        words = enc_mod.linearize_np(enc, all_c)
+        order = enc_mod.sort_key_np(words)
+        srt = words[order]
+        is_last = np.concatenate(
+            [np.any(srt[1:] != srt[:-1], axis=-1), [True]])
+        keep = np.zeros(all_v.shape[0], dtype=bool)
+        keep[order] = is_last
+        all_v = np.where(keep, all_v, np.zeros_like(all_v))
+    return SparseTensor(new_dims, all_c, all_v)
+
+
+def merge_reference(at: AltoTensor, coords, values, policy: str = "sum",
+                    dims: Sequence[int] | None = None,
+                    n_partitions: int | None = None,
+                    compute_reuse: bool = True) -> AltoTensor:
+    """From-scratch host rebuild of an append — `core.ingest.append_delta`'s
+    bit-for-bit parity reference: the standard numpy `build` over
+    `merge_coo`'s concatenated COO, under the grown dims. The jitted
+    merge's one stable sort of [resident stream; delta batch] must equal
+    this stable sort of the same multiset in the same input order —
+    stream, values, partition boxes, and meta all bit-identical.
+    """
+    x = to_sparse(at)
+    merged = merge_coo(x, coords, values, policy=policy,
+                       dims=grown_dims(x.dims, coords, dims))
+    L = at.meta.n_partitions if n_partitions is None else n_partitions
+    return build(merged, n_partitions=L, compute_reuse=compute_reuse)

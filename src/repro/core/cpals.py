@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import ingest as ingest_mod
 from repro.core import plan as plan_mod
 from repro.core.alto import AltoTensor, OrientedView
 from repro.core.mttkrp import mttkrp_adaptive
@@ -122,11 +123,29 @@ def cp_als(at: AltoTensor, rank: int, n_iters: int = 50, tol: float = 1e-5,
            seed: int = 0, views: dict[int, OrientedView] | None = None,
            factors: list[jnp.ndarray] | None = None,
            plan: plan_mod.ExecutionPlan | None = None,
-           gram_fn=None, tune: str = "off") -> CpalsResult:
+           gram_fn=None, tune: str = "off",
+           warm_start=None) -> CpalsResult:
     """CP-ALS driver. ``tune`` ("off"|"auto"|"force") selects measured
     plans from the autotuner's persistent store — the tensor data is in
     hand here, so a store miss under "auto"/"force" runs the measured
-    tuner (`core.autotune`) before the first sweep."""
+    tuner (`core.autotune`) before the first sweep.
+
+    ``warm_start`` seeds the sweep from a previous solve — a
+    `CpalsResult`, ``(lam, factors)``, or a factor list — with rows for
+    newly-grown extents filled from the seeded init
+    (`ingest.grow_factors`). After `ingest.append_delta` this turns the
+    per-delta cost into sweeps-from-converged instead of from-scratch.
+    """
+    if factors is not None and warm_start is not None:
+        raise ValueError("pass factors= or warm_start=, not both")
+    if warm_start is not None:
+        lam_w, factors = ingest_mod.grow_factors(
+            warm_start, at.dims, rank, seed=seed, dtype=at.values.dtype)
+        if lam_w is not None:
+            # Fold the previous weights in so the first sweep starts at
+            # the previous MODEL, not its column-normalized shadow.
+            factors = list(factors)
+            factors[0] = factors[0] * lam_w[None, :]
     if plan is None:
         plan = plan_mod.make_plan(at.meta, rank, tune=tune, at=at)
     elif plan.rank != rank:

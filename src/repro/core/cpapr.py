@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import heuristics
+from repro.core import ingest as ingest_mod
 from repro.core import plan as plan_mod
 from repro.core.alto import AltoTensor, OrientedView, delinearize
 from repro.core.mttkrp import krp_rows
@@ -190,8 +191,14 @@ def cp_apr(at: AltoTensor, rank: int, params: CpaprParams | None = None,
            views: dict[int, OrientedView] | None = None,
            track_ll: bool = False,
            plan: plan_mod.ExecutionPlan | None = None,
-           tune: str = "off") -> CpaprResult:
+           tune: str = "off", warm_start=None) -> CpaprResult:
     """CP-APR MU driver (Alg. 2). `pi_policy`: None=adaptive|'pre'|'otf'.
+
+    ``warm_start`` seeds (λ, factors) from a previous solve — a
+    `CpaprResult`, ``(lam, factors)``, or a factor list — clamped
+    positive and column-renormalized, with rows for newly-grown extents
+    filled small-positive (`ingest.grow_factors(positive=True)`); after
+    `ingest.append_delta` the MU loop resumes near the converged state.
 
     All kernel routing (traversal per mode, Π policy, jnp vs Pallas) comes
     from ``plan``; the default plan resolves the paper heuristics with the
@@ -221,8 +228,15 @@ def cp_apr(at: AltoTensor, rank: int, params: CpaprParams | None = None,
             traversals=["oriented"] * N,
             plan=plan)
     total = float(jnp.sum(at.values))
-    lam, factors = init_factors(at.dims, rank, seed=seed, total=total,
-                                dtype=at.values.dtype)
+    if warm_start is not None:
+        lam, factors = ingest_mod.grow_factors(
+            warm_start, at.dims, rank, seed=seed, dtype=at.values.dtype,
+            positive=True)
+        if lam is None:
+            lam = jnp.full((rank,), total / rank, dtype=at.values.dtype)
+    else:
+        lam, factors = init_factors(at.dims, rank, seed=seed, total=total,
+                                    dtype=at.values.dtype)
 
     if plan is None:
         plan = plan_mod.make_plan(at.meta, rank, tune=tune,

@@ -157,6 +157,26 @@ def ensure_host(view) -> HostStream:
 # Disk backing (optional): .npy files re-opened as read-only memmaps
 # ---------------------------------------------------------------------------
 
+def _respill(hs: HostStream, d: pathlib.Path) -> HostStream:
+    """Write ``hs`` into ``d`` atomically and reopen it memory-mapped.
+
+    Each array goes to a ``.tmp`` sibling first and is moved into place
+    with ``os.replace`` — readers holding memmaps of the OLD files keep
+    the old inodes alive (no torn reads, no SIGBUS from a truncating
+    in-place ``np.save``), and a crash mid-spill leaves the previous
+    generation intact.
+    """
+    d.mkdir(parents=True, exist_ok=True)
+    payload = {"rows": np.asarray(hs.rows), "words": np.asarray(hs.words),
+               "values": np.asarray(hs.values),
+               "length": np.asarray([hs.length], np.int64)}
+    for name, arr in payload.items():
+        tmp = d / f".{name}.tmp.npy"
+        np.save(tmp, arr)
+        os.replace(tmp, d / f"{name}.npy")
+    return from_memmap(d, hs.meta, hs.mode)
+
+
 def to_memmap(hs: HostStream, directory) -> HostStream:
     """Spill ``hs`` to ``directory`` and reopen it memory-mapped.
 
@@ -165,13 +185,7 @@ def to_memmap(hs: HostStream, directory) -> HostStream:
     the OS pages chunks in as the executors slice them, so the host
     working set is bounded by the touched chunks, not the stream.
     """
-    d = pathlib.Path(directory)
-    d.mkdir(parents=True, exist_ok=True)
-    np.save(d / "rows.npy", np.asarray(hs.rows))
-    np.save(d / "words.npy", np.asarray(hs.words))
-    np.save(d / "values.npy", np.asarray(hs.values))
-    np.save(d / "length.npy", np.asarray([hs.length], np.int64))
-    return from_memmap(d, hs.meta, hs.mode)
+    return _respill(hs, pathlib.Path(directory))
 
 
 def from_memmap(directory, meta: AltoMeta, mode: int) -> HostStream:
@@ -182,6 +196,23 @@ def from_memmap(directory, meta: AltoMeta, mode: int) -> HostStream:
                       rows=np.load(d / "rows.npy", mmap_mode="r"),
                       words=np.load(d / "words.npy", mmap_mode="r"),
                       values=np.load(d / "values.npy", mmap_mode="r"))
+
+
+def append_stream(hs: HostStream, at_new: AltoTensor) -> HostStream:
+    """In-place update path for host/memmap streams after an append.
+
+    Rebuilds the oriented stream for ``hs.mode`` from the merged tensor
+    (`core.ingest.append_delta`'s result). A plain-numpy stream returns a
+    fresh host-resident one; a memmap-backed stream is re-spilled into
+    ITS OWN directory (recovered from ``np.memmap.filename``) via the
+    atomic `_respill`, so the out-of-core tensor updates in place on disk
+    while executors still slicing the previous generation keep reading
+    the old inodes.
+    """
+    merged = host_stream(at_new, hs.mode)
+    if isinstance(hs.words, np.memmap):
+        return _respill(merged, pathlib.Path(hs.words.filename).parent)
+    return merged
 
 
 def put_chunk(hs: HostStream, start: int, stop: int):

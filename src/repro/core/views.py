@@ -42,6 +42,7 @@ caller shares the cached arrays (`plan.build_views` routes through here).
 from __future__ import annotations
 
 import collections
+import dataclasses
 import os
 import threading
 
@@ -59,7 +60,7 @@ DEFAULT_CACHE_BYTES = 2 * 1024 ** 3
 _CACHE: "collections.OrderedDict[tuple, OrientedView]" = \
     collections.OrderedDict()
 _CACHE_BYTES: dict[tuple, int] = {}
-_STATS = {"hits": 0, "misses": 0, "builds": 0}
+_STATS = {"hits": 0, "misses": 0, "builds": 0, "invalidated": 0}
 _LOCK = threading.Lock()
 # key -> Event set when that key's in-flight build lands (or fails). The
 # global lock only guards map bookkeeping; builds run outside it.
@@ -120,6 +121,37 @@ def fingerprint(at: AltoTensor) -> tuple:
     return fp
 
 
+def mode_fingerprint(at: AltoTensor, mode: int) -> tuple:
+    """Per-(tensor content, mode) fingerprint — the invalidation unit.
+
+    Deliberately EXCLUDES the partitioning fields of `AltoMeta`
+    (n_partitions, temp_rows, fiber_reuse): an oriented view is a pure
+    permutation of the padded stream, so re-tiling the same stream under
+    a different partition count leaves every cached view valid. Only the
+    encoding, the real/padded lengths, the content checksums, and the
+    mode participate — which is what lets `invalidate_changed` keep
+    untouched entries alive after a re-tile or a no-op append.
+    """
+    meta, Mp, w, v = fingerprint(at)
+    return (meta.enc, meta.nnz, Mp, w, v, int(mode))
+
+
+def _rebind_meta(key: tuple, entry, at: AltoTensor):
+    """Cached entries key on `mode_fingerprint`, which ignores the
+    partitioning fields — so a re-tile can HIT an entry built under a
+    different `AltoMeta`. The arrays are identical (pure permutation of
+    the same stream); only the meta tag is stale. Rebind it lazily,
+    storing the rebound entry back so repeated gets with the same tensor
+    return the identical object (callers assert `is`-identity)."""
+    if entry.meta == at.meta:
+        return entry
+    entry = dataclasses.replace(entry, meta=at.meta)
+    with _LOCK:
+        if key in _CACHE:
+            _CACHE[key] = entry
+    return entry
+
+
 def _get_or_build(key: tuple, build):
     """Latched cache lookup shared by `get_view` and `get_stream`.
 
@@ -173,14 +205,14 @@ def get_view(at: AltoTensor, mode: int,
              route: str | None = None) -> OrientedView:
     """The oriented view for ``(at, mode)``: cached, built on miss
     (per-key latched — see `_get_or_build`)."""
-    key = (fingerprint(at), int(mode))
+    key = ("view", *mode_fingerprint(at, mode))
 
     def build():
         route_ = route or default_route()
         return (alto.oriented_view_device(at, mode)
                 if route_ == "device" else alto.oriented_view(at, mode))
 
-    return _get_or_build(key, build)
+    return _rebind_meta(key, _get_or_build(key, build), at)
 
 
 def get_stream(at: AltoTensor, mode: int) -> HostStream:
@@ -194,8 +226,10 @@ def get_stream(at: AltoTensor, mode: int) -> HostStream:
     buffer alive after the cache entry is dropped (no use-after-evict —
     pinned by `tests/test_outofcore.py`).
     """
-    key = (fingerprint(at), int(mode), "stream")
-    return _get_or_build(key, lambda: stream_mod.host_stream(at, mode))
+    key = ("stream", *mode_fingerprint(at, mode))
+    return _rebind_meta(
+        key, _get_or_build(key, lambda: stream_mod.host_stream(at, mode)),
+        at)
 
 
 def build_views(at: AltoTensor, plan, route: str | None = None) -> dict:
@@ -212,17 +246,36 @@ def build_views(at: AltoTensor, plan, route: str | None = None) -> dict:
             for m in plan.modes if heuristics.is_oriented(m.traversal)}
 
 
-def invalidate(at: AltoTensor) -> int:
-    """Drop every cached view of ``at``; returns how many were evicted.
-    For services that release a large tensor and want its O(nnz) view
-    copies freed before LRU aging would get to them."""
-    fp = fingerprint(at)
+def invalidate(at: AltoTensor, modes=None) -> int:
+    """Drop cached views/streams of ``at`` — all modes by default, or only
+    ``modes`` — returning how many entries were evicted (also accumulated
+    in the ``invalidated`` counter). Per-(fingerprint, mode) surgical:
+    untouched modes' O(nnz) copies stay cached. For services that release
+    a tensor (or re-ingest one mode) and want the stale copies freed
+    before LRU aging would get to them."""
+    if modes is None:
+        modes = range(len(at.dims))
+    fps = {mode_fingerprint(at, int(m)) for m in modes}
     with _LOCK:
-        dead = [k for k in _CACHE if k[0] == fp]
+        dead = [k for k in _CACHE if k[1:] in fps]
         for k in dead:
             del _CACHE[k]
             _CACHE_BYTES.pop(k, None)
+        _STATS["invalidated"] += len(dead)
     return len(dead)
+
+
+def invalidate_changed(old_at: AltoTensor, new_at: AltoTensor) -> int:
+    """Surgical post-append invalidation: drop ``old_at``'s cached entries
+    only for the modes whose `mode_fingerprint` actually changed between
+    the two tensors. A no-op append (empty delta under the "sum" policy)
+    or a pure re-tile changes no fingerprints, so nothing is dropped and
+    every cached view keeps serving; a content-changing append stales all
+    modes' entries (each oriented view permutes the full stream) and they
+    are released eagerly instead of aging out of the LRU."""
+    stale = [m for m in range(len(old_at.dims))
+             if mode_fingerprint(old_at, m) != mode_fingerprint(new_at, m)]
+    return invalidate(old_at, modes=stale) if stale else 0
 
 
 def cache_stats() -> dict[str, int]:

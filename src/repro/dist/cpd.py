@@ -48,11 +48,14 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import alto
 from repro.core import cpals
+from repro.core import ingest as ingest_mod
+from repro.core.encoding import make_encoding
 from repro.core import heuristics
 from repro.core import plan as plan_mod
 from repro.core.alto import AltoTensor, OrientedView
@@ -254,6 +257,62 @@ def sharded_gram(mesh, A: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Distributed incremental ingest (sharded COO deltas)
+# ---------------------------------------------------------------------------
+
+def sharded_append_delta(at: AltoTensor, coords, values, mesh, *,
+                         policy: str = "sum", dims=None,
+                         n_partitions: int | None = None,
+                         compute_reuse: bool | None = None,
+                         invalidate_stale: bool = True) -> AltoTensor:
+    """`core.ingest.append_delta` with the delta's linearization sharded
+    over ``mesh`` — the distributed ingest entry point for COO deltas
+    that arrive row-partitioned across hosts/devices.
+
+    Linearization is the only embarrassingly parallel stage (pure
+    per-element bit gather, no collective), so it runs shard-local under
+    `shard_map` — the batch is zero-padded to a shard multiple, split
+    over the mesh's first axis, and the reassembled words are sliced
+    back to the real length before `ingest.append_linearized` runs the
+    (inherently global) merge sort. Bitwise identical to the local
+    `append_delta`: padding never reaches the merge, and the per-shard
+    bit gather is elementwise.
+    """
+    coords = np.asarray(coords, dtype=np.int32).reshape(-1, len(at.dims))
+    new_dims = alto.grown_dims(at.dims, coords, dims)
+    D = coords.shape[0]
+    if D == 0:
+        return ingest_mod.append_delta(
+            at, coords, values, policy=policy, dims=new_dims,
+            n_partitions=n_partitions, compute_reuse=compute_reuse,
+            invalidate_stale=invalidate_stale)
+    enc = make_encoding(new_dims)
+    ax = mesh.axis_names[0]
+    S = int(mesh.shape[ax])
+    pad = (-D) % S
+    if pad:
+        coords = np.concatenate(
+            [coords, np.zeros((pad, coords.shape[1]), np.int32)])
+    Dp = coords.shape[0]
+
+    def build():
+        @functools.partial(shard_map, mesh=mesh, in_specs=(P(ax),),
+                           out_specs=P(ax))
+        def sharded(c):
+            return alto.linearize(enc, c)
+
+        return jax.jit(sharded)
+
+    fn = ops._cached_executable(("dist_delta_linearize", enc, mesh, Dp),
+                                build)
+    words = fn(jnp.asarray(coords))[:D]
+    return ingest_mod.append_linearized(
+        at, words, values, new_dims, policy=policy,
+        n_partitions=n_partitions, compute_reuse=compute_reuse,
+        invalidate_stale=invalidate_stale)
+
+
+# ---------------------------------------------------------------------------
 # Distributed CP-ALS driver
 # ---------------------------------------------------------------------------
 
@@ -262,7 +321,7 @@ def distributed_cp_als(x: SparseTensor | AltoTensor, rank: int, mesh, *,
                        n_partitions: int | None = None,
                        backend: str | None = None,
                        interpret: bool | None = None,
-                       tune: str = "off"):
+                       tune: str = "off", warm_start=None):
     """CP-ALS with MTTKRP and Grams sharded over ``mesh`` (GPipe's sibling
     seam: data-parallel over the nonzero stream, model-replicated factors).
 
@@ -296,6 +355,6 @@ def distributed_cp_als(x: SparseTensor | AltoTensor, rank: int, mesh, *,
                               interpret=interpret, mesh=mesh,
                               tune=tune, at=at)
     res = cpals.cp_als(at, rank, n_iters=n_iters, tol=tol, seed=seed,
-                       plan=plan,
+                       plan=plan, warm_start=warm_start,
                        gram_fn=functools.partial(sharded_gram, mesh))
     return res.lam, res.factors, res.fits

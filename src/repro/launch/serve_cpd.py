@@ -43,7 +43,9 @@ from typing import Sequence
 import numpy as np
 
 from repro.core import alto, batched, shapeclass
+from repro.core import cpals as cpals_mod
 from repro.core import cpapr as cpapr_mod
+from repro.core import ingest as ingest_mod
 from repro.core import plan as plan_mod
 from repro.sparse.tensor import SparseTensor
 
@@ -55,6 +57,17 @@ class CpdRequest:
     x: SparseTensor
     sc: shapeclass.ShapeClass
     seed: int
+    submitted_at: float
+
+
+@dataclasses.dataclass
+class DeltaRequest:
+    """An incremental update against a previously served result."""
+    request_id: int
+    base_id: int                   # request id of the retained base result
+    coords: np.ndarray
+    values: np.ndarray
+    policy: str
     submitted_at: float
 
 
@@ -80,7 +93,8 @@ class CpdService:
     def __init__(self, rank: int, algorithm: str = "cp_als", *,
                  capacity: int = 8, n_partitions: int | None = None,
                  n_iters: int = 25, tol: float = 1e-4,
-                 tune: str = "auto", backend: str | None = None):
+                 tune: str = "auto", backend: str | None = None,
+                 retain_results: int = 128):
         if algorithm not in ("cp_als", "cp_apr"):
             raise ValueError(f"unknown algorithm {algorithm!r}")
         self.rank = int(rank)
@@ -101,6 +115,18 @@ class CpdService:
         self._tenants_done = 0
         self._buckets_run = 0
         self._busy_s = 0.0
+        # rid -> (x | None, AltoTensor | None, result, sc): every served
+        # result is retained (LRU-bounded) so `submit_delta` can append
+        # against it and warm-start from its factors. The AltoTensor slot
+        # starts None (the bucketed path pads to the class shape, which
+        # the delta path does NOT want) and is filled lazily on the first
+        # delta; delta responses retain their merged tensor directly, so
+        # delta CHAINS run the jitted merge with no rebuild anywhere.
+        self.retain_results = int(retain_results)
+        self._retained: "collections.OrderedDict[int, tuple]" = \
+            collections.OrderedDict()
+        self._delta_queue: collections.deque = collections.deque()
+        self._deltas_done = 0
 
     # -- admission --------------------------------------------------------
 
@@ -121,9 +147,38 @@ class CpdService:
             self._queues.setdefault(sc, collections.deque()).append(req)
         return req.request_id
 
+    def submit_delta(self, base_id: int, coords, values,
+                     policy: str = "sum") -> int:
+        """Admit a COO delta against a previously served result; returns
+        the new request id. The base must still be retained (see
+        ``retain_results``). Deltas skip class bucketing entirely: they
+        are latency-sensitive singletons whose jit cache is already warm
+        (the merge core keys on the static merge meta, the sweep on the
+        tensor meta), so `process()` serves them solo with
+        ``warm_start=`` from the base's factors.
+        """
+        if policy not in ingest_mod.POLICIES:
+            raise ValueError(f"policy {policy!r}: expected one of "
+                             f"{ingest_mod.POLICIES}")
+        coords = np.asarray(coords, dtype=np.int32)
+        values = np.asarray(values)
+        req = DeltaRequest(request_id=-1, base_id=int(base_id),
+                           coords=coords, values=values, policy=policy,
+                           submitted_at=time.perf_counter())
+        with self._lock:
+            if int(base_id) not in self._retained:
+                raise KeyError(f"request {base_id} is not retained "
+                               f"(never served, or aged out of the "
+                               f"{self.retain_results}-entry LRU)")
+            req.request_id = self._next_id
+            self._next_id += 1
+            self._delta_queue.append(req)
+        return req.request_id
+
     def pending(self) -> int:
         with self._lock:
-            return sum(len(q) for q in self._queues.values())
+            return (sum(len(q) for q in self._queues.values())
+                    + len(self._delta_queue))
 
     def shape_classes(self) -> list[shapeclass.ShapeClass]:
         with self._lock:
@@ -204,12 +259,64 @@ class CpdService:
             self._tenants_done += len(responses)
             self._buckets_run += 1
             self._busy_s += done - t0
+            for req, result in zip(reqs, out.results):
+                self._retain_locked(req.request_id,
+                                    (req.x, None, result, sc))
         return responses
 
+    def _retain_locked(self, rid: int, entry: tuple) -> None:
+        self._retained[rid] = entry
+        while len(self._retained) > max(1, self.retain_results):
+            self._retained.popitem(last=False)
+
+    def _run_delta(self, req: DeltaRequest) -> CpdResponse:
+        t0 = time.perf_counter()
+        with self._lock:
+            x, at, result, sc = self._retained[req.base_id]
+        if at is None:
+            # First delta against a bucket-served base: materialize the
+            # REAL-dims tensor once (the bucketed solve ran on the
+            # class-padded shape, which deltas must not inherit).
+            at = alto.build_device(x, n_partitions=self.n_partitions,
+                                   compute_reuse=False)
+            with self._lock:
+                if req.base_id in self._retained:
+                    self._retained[req.base_id] = (x, at, result, sc)
+        new_at = ingest_mod.append_delta(at, req.coords, req.values,
+                                         policy=req.policy)
+        if self.algorithm == "cp_als":
+            res = cpals_mod.cp_als(new_at, self.rank, n_iters=self.n_iters,
+                                   tol=self.tol, warm_start=result)
+        else:
+            res = cpapr_mod.cp_apr(
+                new_at, self.rank,
+                params=cpapr_mod.CpaprParams(k_max=self.n_iters,
+                                             tau=self.tol),
+                warm_start=result)
+        done = time.perf_counter()
+        resp = CpdResponse(request_id=req.request_id, sc=sc, result=res,
+                           latency_s=done - req.submitted_at,
+                           bucket_size=1)
+        with self._lock:
+            self._latencies.append(resp.latency_s)
+            self._deltas_done += 1
+            self._busy_s += done - t0
+            self._retain_locked(req.request_id, (None, new_at, res, sc))
+        return resp
+
     def process(self, flush: bool = True) -> list[CpdResponse]:
-        """Drain the queues: full buckets always, partial ones if
-        ``flush`` (padded with inactive slots — same executable)."""
+        """Drain the queues: deltas first (latency-sensitive, already
+        warm — solo solves seeded from the retained base), then full
+        buckets always, partial ones if ``flush`` (padded with inactive
+        slots — same executable)."""
         responses: list[CpdResponse] = []
+        while True:
+            with self._lock:
+                dreq = (self._delta_queue.popleft()
+                        if self._delta_queue else None)
+            if dreq is None:
+                break
+            responses.append(self._run_delta(dreq))
         while True:
             with self._lock:
                 batch_ = None
@@ -235,12 +342,14 @@ class CpdService:
             done, buckets, busy = (self._tenants_done, self._buckets_run,
                                    self._busy_s)
             classes = len(self._plans)
+            deltas = self._deltas_done
 
         def pct(p):
             return lats[min(n - 1, int(p * n))] if n else 0.0
 
         return {
             "tenants_done": done,
+            "deltas_done": deltas,
             "buckets_run": buckets,
             "shape_classes": classes,
             "tenants_per_s": (done / busy) if busy > 0 else 0.0,

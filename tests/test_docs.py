@@ -24,7 +24,8 @@ def test_docs_pages_exist():
     names = {p.name for p in _pages()}
     for required in ("architecture.md", "alto-format.md", "distributed.md",
                      "benchmarks.md", "known-issues.md", "autotuning.md",
-                     "serving.md", "out-of-core.md"):
+                     "serving.md", "out-of-core.md",
+                     "dynamic-tensors.md"):
         assert required in names, f"docs/{required} missing"
 
 
