@@ -10,7 +10,15 @@ Rows (docs/serving.md):
 * ``serving/latency_p50`` / ``serving/latency_p99`` — submit-to-result
   wall clock per tenant (µs), bucket-mates included;
 * ``serving/solo_us_per_tenant`` — the unbatched baseline: the same
-  tenants through individual `cp_als` calls, one compile each.
+  tenants through individual `cp_als` calls, one compile each;
+* ``serving/guarded_us`` / ``serving/unguarded_us`` — the health-guard
+  overhead bound (PR 9): the same bucket served with and without the
+  per-sweep guards, median of several reps, ASSERTED within 5% (plus a
+  small absolute slack for timer noise);
+* ``serving/degraded_retry_us`` / ``serving/degraded_bisect_us`` —
+  degraded-mode latency: a bucket that absorbed transient-fault retries
+  with backoff, and a bucket that died and was bisected into solo
+  re-runs (`docs/resilience.md` recovery ladders).
 """
 from __future__ import annotations
 
@@ -19,7 +27,8 @@ import time
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core import alto, batched, cpals
+from repro.core import alto, batched, cpals, faults
+from repro.core import views as views_mod
 from repro.launch.serve_cpd import CpdService
 from repro.sparse.synthetic import uniform_tensor
 
@@ -79,3 +88,75 @@ def run(quick: bool = False) -> None:
     solo_wall = time.perf_counter() - t0
     emit("serving/solo_us_per_tenant", solo_wall * 1e6 / n_tenants,
          f"speedup={solo_wall / max(wall, 1e-9):.2f}x")
+
+    _guard_overhead(rank, iters, quick)
+    _degraded_modes(rank, iters)
+
+
+def _serve_once(rank, iters, xs, *, guard, armed=None, **svc_kw):
+    """One fresh service over ``xs``; returns (wall_s, responses, svc)."""
+    svc = CpdService(rank, capacity=4, n_iters=iters, tol=0.0,
+                     tune="off", backend="reference", guard=guard,
+                     retry_base_s=1e-4, **svc_kw)
+    for i, x in enumerate(xs):
+        svc.submit(x, seed=i)
+    if armed:
+        faults.arm(*armed[0], **armed[1])
+    t0 = time.perf_counter()
+    responses = svc.process()
+    wall = time.perf_counter() - t0
+    assert all(r.ok for r in responses), [r.error for r in responses]
+    return wall, responses, svc
+
+
+def _guard_overhead(rank, iters, quick):
+    """The guard cost bound: one fused jitted all-finite reduction per
+    sweep must keep a guarded bucket within 5% of an unguarded one."""
+    xs = _tenants(4, quick)
+    reps = 5
+
+    def median_wall(guard):
+        walls = []
+        for _ in range(reps):
+            w, _, _ = _serve_once(rank, iters, xs, guard=guard)
+            walls.append(w)
+        return float(np.median(walls))
+
+    median_wall(False)            # warm both paths' jit caches first
+    median_wall(True)
+    unguarded = median_wall(False)
+    guarded = median_wall(True)
+    pct = 100.0 * (guarded - unguarded) / max(unguarded, 1e-9)
+    emit("serving/unguarded_us", unguarded * 1e6, f"{reps}reps")
+    emit("serving/guarded_us", guarded * 1e6, f"{pct:+.1f}%")
+    # 5% relative plus 50ms absolute slack (tiny CPU buckets: timer and
+    # scheduler noise would otherwise dominate the relative bound)
+    assert guarded <= unguarded * 1.05 + 0.05, (
+        f"guard overhead {pct:.1f}% exceeds the 5% budget "
+        f"(guarded {guarded*1e3:.1f}ms vs unguarded {unguarded*1e3:.1f}ms)")
+
+
+def _degraded_modes(rank, iters):
+    """Latency of the recovery ladders, as rows next to the happy path."""
+    xs = _tenants(4, True)
+    faults.reset()
+
+    # transient-fault retry: the view build fails twice, backoff absorbs
+    views_mod.cache_clear()
+    wall, rs, svc = _serve_once(
+        rank, iters, xs, guard=True,
+        armed=(("views.build",), {"times": 2}))
+    s = svc.stats()
+    assert s["retries"] == 2, s
+    emit("serving/degraded_retry_us", wall * 1e6,
+         f"{s['retries']}retries")
+
+    # bucket bisection: the bucket dies once, every member re-runs solo
+    batched.sweep_cache_clear()
+    wall, rs, svc = _serve_once(
+        rank, iters, xs, guard=True,
+        armed=(("batched.sweep",), {"times": 1}))
+    assert all(r.bucket_size == 1 for r in rs), "expected solo re-runs"
+    emit("serving/degraded_bisect_us", wall * 1e6,
+         f"{len(rs)}solos")
+    faults.reset()

@@ -6,8 +6,9 @@ from repro.core.alto import (AltoTensor, AltoMeta, OrientedView, build,
                              oriented_view_device, linearize, delinearize,
                              to_sparse, merge_coo, merge_reference,
                              grown_dims)
-from repro.core import (autotune, batched, heuristics, ingest, mttkrp,
-                        plan, cpals, cpapr, shapeclass, stream, views)
+from repro.core import (autotune, batched, faults, health, heuristics,
+                        ingest, mttkrp, plan, cpals, cpapr, shapeclass,
+                        stream, views)
 from repro.core.ingest import append_delta, append_linearized, grow_factors
 from repro.core.heuristics import Traversal
 from repro.core.plan import (ExecutionPlan, ModePlan, make_plan,
@@ -22,8 +23,8 @@ __all__ = [
     "OrientedView", "build", "build_device", "oriented_view",
     "oriented_view_device", "linearize", "delinearize", "to_sparse",
     "merge_coo", "merge_reference", "grown_dims",
-    "autotune", "batched", "heuristics", "ingest", "mttkrp", "plan",
-    "cpals", "cpapr", "shapeclass", "stream", "views",
+    "autotune", "batched", "faults", "health", "heuristics", "ingest",
+    "mttkrp", "plan", "cpals", "cpapr", "shapeclass", "stream", "views",
     "append_delta", "append_linearized", "grow_factors",
     "Traversal", "ExecutionPlan", "ModePlan", "make_plan",
     "make_class_plan", "resident_bytes", "tune_plan",

@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults
 from repro.core import heuristics
 from repro.core import mttkrp as core_mttkrp
 from repro.core import plan as plan_mod
@@ -154,6 +155,7 @@ def load_store(path=None) -> dict:
     stale-version files all load as empty — a bad cache can cost a
     re-measurement, never a crash."""
     try:
+        faults.inject("autotune.store")    # corrupt/unreadable store file
         raw = json.loads(store_path(path).read_text())
     except (OSError, ValueError):
         return {}
@@ -183,6 +185,24 @@ def save_store(plans: dict, path=None) -> pathlib.Path:
             pass
         raise
     return target
+
+
+def evict(key: str, path=None) -> bool:
+    """Drop one stored plan (the evict-and-retune recovery rung).
+
+    A stored plan that fails at *dispatch* — tiling from another
+    device generation, a record that deserializes but whose kernel no
+    longer builds — would otherwise fail every future process that
+    trusts the store. The serving runtime evicts the key and falls back
+    to an untuned static plan for the request in hand; the next tuned
+    solve re-measures and re-populates. Returns True iff present.
+    """
+    plans = load_store(path)
+    if key not in plans:
+        return False
+    del plans[key]
+    save_store(plans, path)
+    return True
 
 
 def serialize_plan(plan: plan_mod.ExecutionPlan) -> dict:

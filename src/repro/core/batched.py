@@ -47,7 +47,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cpals, cpapr
+from repro.core import cpals, cpapr, faults
+from repro.core import health as health_mod
 from repro.core import plan as plan_mod
 from repro.core.alto import AltoTensor, OrientedView
 
@@ -140,6 +141,9 @@ def _als_sweep_fn(plan: plan_mod.ExecutionPlan):
 class BatchedCpalsResult:
     results: list[cpals.CpalsResult]   # per tenant, factors at REAL dims
     n_sweeps: int                      # batched sweeps executed
+    # quarantined[i]: tenant i's update went non-finite under guard=True;
+    # its result is the last good iterate, frozen from that sweep on.
+    quarantined: list[bool] = dataclasses.field(default_factory=list)
 
 
 def batched_cp_als(ats: Sequence[AltoTensor],
@@ -150,7 +154,8 @@ def batched_cp_als(ats: Sequence[AltoTensor],
                    n_iters: int = 50, tol: float = 1e-5,
                    seeds: Sequence[int] | None = None,
                    init_factors: Sequence[list[jnp.ndarray]] | None = None,
-                   capacity: int | None = None) -> BatchedCpalsResult:
+                   capacity: int | None = None,
+                   guard: bool = False) -> BatchedCpalsResult:
     """CP-ALS over K same-class tenants through ONE jitted executable.
 
     ``ats``/``views`` are the canonicalized class members (all sharing
@@ -161,6 +166,14 @@ def batched_cp_als(ats: Sequence[AltoTensor],
     class reuses one trace regardless of how full it is. Per-tenant
     convergence uses the same host-side Kolda–Bader fit and ``tol`` as
     solo `cp_als`; a converged tenant freezes while bucket-mates sweep.
+
+    ``guard=True`` adds the per-tenant quarantine (`core.health`): after
+    each sweep a jitted per-slot all-finite mask flags tenants whose
+    update went non-finite (vmap keeps lanes independent, so the poison
+    never crosses slots); a flagged tenant rolls back to its previous
+    iterate and freezes through the SAME where-mask machinery that
+    freezes converged tenants — bucket-mates keep sweeping, bitwise
+    unaffected, and the offender's result carries ``quarantined=True``.
     """
     K = len(ats)
     if K == 0:
@@ -197,23 +210,54 @@ def batched_cp_als(ats: Sequence[AltoTensor],
               for at in ats]
     active = np.zeros(cap, bool)
     active[:K] = True
+    quarantined = np.zeros(cap, bool)
     fits: list[list[float]] = [[] for _ in range(K)]
     prev = np.full(K, -np.inf)
     sweep = _als_sweep_fn(plan)
     n_sweeps = 0
     for _ in range(n_iters):
+        faults.inject("batched.sweep")
+        good_f, good_l = factors_b, lam_b
         factors_b, lam_b, M_last = sweep(at_b, views_b, factors_b, lam_b,
                                          jnp.asarray(active))
         n_sweeps += 1
+        pd = faults.fire("batched.nan")
+        if pd is not None:
+            t = int(pd.get("tenant", 0))
+            poison = pd.get("value", float("nan"))
+            factors_b = list(factors_b)
+            factors_b[-1] = factors_b[-1].at[t, 0, 0].set(poison)
+        if guard:
+            ok = health_mod.tenants_finite([*factors_b, lam_b, M_last])
+            bad = active & ~ok
+        else:
+            bad = np.zeros(cap, bool)
         for i in range(K):
-            if not active[i]:
+            if not active[i] or bad[i]:
                 continue
             fit = cpals._fit_host(M_last[i], [A[i] for A in factors_b],
                                   lam_b[i], normX2[i])
+            if guard and (not np.isfinite(fit)
+                          or fit < health_mod.FIT_FLOOR):
+                # Huge-but-finite poison: this slot must be quarantined
+                # NOW — its Grams overflow the next vmapped sweep and a
+                # non-finite SVD can spin forever (health.FIT_FLOOR).
+                bad[i] = True
+                continue
             fits[i].append(fit)
             if abs(fit - prev[i]) < tol:
                 active[i] = False
             prev[i] = fit
+        if guard and bad.any():
+            # Roll the poisoned slots back to their previous iterate
+            # and freeze them — the same where-mask that freezes
+            # converged tenants, so bucket-mates are untouched.
+            b3 = jnp.asarray(bad)[:, None, None]
+            factors_b = [jnp.where(b3, g, f)
+                         for g, f in zip(good_f, factors_b)]
+            lam_b = jnp.where(jnp.asarray(bad)[:, None], good_l, lam_b)
+            quarantined |= bad
+            active &= ~bad
         if not active[:K].any():
             break
 
@@ -223,7 +267,9 @@ def batched_cp_als(ats: Sequence[AltoTensor],
         results.append(cpals.CpalsResult(
             lam=lam_b[i], factors=fac, fits=fits[i],
             n_iters=len(fits[i]), plan=plan))
-    return BatchedCpalsResult(results=results, n_sweeps=n_sweeps)
+    return BatchedCpalsResult(results=results, n_sweeps=n_sweeps,
+                              quarantined=[bool(q)
+                                           for q in quarantined[:K]])
 
 
 # ---------------------------------------------------------------------------
@@ -258,6 +304,8 @@ def _apr_update_fn(plan: plan_mod.ExecutionPlan, mode: int,
 class BatchedCpaprResult:
     results: list[cpapr.CpaprResult]   # per tenant, factors at REAL dims
     n_outer: int                       # batched outer iterations executed
+    # Same contract as BatchedCpalsResult.quarantined (guard=True only).
+    quarantined: list[bool] = dataclasses.field(default_factory=list)
 
 
 def batched_cp_apr(ats: Sequence[AltoTensor],
@@ -267,7 +315,8 @@ def batched_cp_apr(ats: Sequence[AltoTensor],
                    plan: plan_mod.ExecutionPlan,
                    params: cpapr.CpaprParams | None = None,
                    seeds: Sequence[int] | None = None,
-                   capacity: int | None = None) -> BatchedCpaprResult:
+                   capacity: int | None = None,
+                   guard: bool = False) -> BatchedCpaprResult:
     """CP-APR over K same-class tenants through one executable per mode.
 
     Same stacking/masking contract as `batched_cp_als`. A tenant freezes
@@ -315,11 +364,14 @@ def batched_cp_apr(ats: Sequence[AltoTensor],
 
     active = np.zeros(cap, bool)
     active[:K] = True
+    quarantined = np.zeros(cap, bool)
     kkt_hist: list[list[float]] = [[] for _ in range(K)]
     n_inner_tot = np.zeros(cap, np.int64)
     n_outer_seen = np.zeros(K, np.int32)
     n_outer = 0
     for outer in range(1, p.k_max + 1):
+        faults.inject("batched.sweep")
+        good = (lam_b, list(factors_b), list(phi_b))
         n_outer = outer
         conv_all = np.ones(cap, bool)
         kkt_max = np.zeros(cap)
@@ -328,12 +380,30 @@ def batched_cp_apr(ats: Sequence[AltoTensor],
             A, lam_b, Phi, conv, n_inner, kkt = fn(
                 at_b, views_b.get(n), lam_b, factors_b, phi_b[n],
                 jnp.asarray(active))
+            pd = faults.fire("batched.nan")
+            if pd is not None:
+                t = int(pd.get("tenant", 0))
+                A = A.at[t, 0, 0].set(pd.get("value", float("nan")))
             factors_b = list(factors_b)
             factors_b[n] = A
             phi_b[n] = Phi
             conv_all &= np.asarray(conv)
             n_inner_tot += np.asarray(n_inner, np.int64)
             kkt_max = np.maximum(kkt_max, np.asarray(kkt))
+        if guard:
+            ok = health_mod.tenants_finite([lam_b, *factors_b])
+            ok &= np.isfinite(kkt_max)
+            bad = active & ~ok
+            if bad.any():
+                g_lam, g_fac, g_phi = good
+                b3 = jnp.asarray(bad)[:, None, None]
+                factors_b = [jnp.where(b3, g, f)
+                             for g, f in zip(g_fac, factors_b)]
+                phi_b = [jnp.where(b3, g, f)
+                         for g, f in zip(g_phi, phi_b)]
+                lam_b = jnp.where(jnp.asarray(bad)[:, None], g_lam, lam_b)
+                quarantined |= bad
+                active &= ~bad
         for i in range(K):
             if active[i]:
                 kkt_hist[i].append(float(kkt_max[i]))
@@ -353,4 +423,6 @@ def batched_cp_apr(ats: Sequence[AltoTensor],
             pi_policy=plan.pi_policy.value,
             traversals=[plan.modes[n].traversal.value for n in range(N)],
             plan=plan))
-    return BatchedCpaprResult(results=results, n_outer=n_outer)
+    return BatchedCpaprResult(results=results, n_outer=n_outer,
+                              quarantined=[bool(q)
+                                           for q in quarantined[:K]])

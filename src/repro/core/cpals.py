@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults
+from repro.core import health as health_mod
 from repro.core import ingest as ingest_mod
 from repro.core import plan as plan_mod
 from repro.core.alto import AltoTensor, OrientedView
@@ -46,6 +48,10 @@ class CpalsResult:
     fits: list[float]                # fit per iteration
     n_iters: int
     plan: plan_mod.ExecutionPlan | None = None
+    # Guard outcome when the solve ran with guard=True (None otherwise).
+    # rolled_back=True means the returned state is the last good iterate
+    # before a non-finite or fit-regressing sweep (core.health).
+    health: health_mod.HealthReport | None = None
 
 
 def init_factors(dims: Sequence[int], rank: int, seed: int = 0,
@@ -124,7 +130,8 @@ def cp_als(at: AltoTensor, rank: int, n_iters: int = 50, tol: float = 1e-5,
            factors: list[jnp.ndarray] | None = None,
            plan: plan_mod.ExecutionPlan | None = None,
            gram_fn=None, tune: str = "off",
-           warm_start=None) -> CpalsResult:
+           warm_start=None, guard: bool = False,
+           guard_slack: float = 1e-3) -> CpalsResult:
     """CP-ALS driver. ``tune`` ("off"|"auto"|"force") selects measured
     plans from the autotuner's persistent store — the tensor data is in
     hand here, so a store miss under "auto"/"force" runs the measured
@@ -135,6 +142,13 @@ def cp_als(at: AltoTensor, rank: int, n_iters: int = 50, tol: float = 1e-5,
     newly-grown extents filled from the seeded init
     (`ingest.grow_factors`). After `ingest.append_delta` this turns the
     per-delta cost into sweeps-from-converged instead of from-scratch.
+
+    ``guard=True`` runs the per-sweep health guards (`core.health`): a
+    jitted all-finite check over the sweep's outputs plus the host-side
+    fit-monotonicity check (a drop beyond ``guard_slack``), rolling back
+    to the last good (factors, λ) and stopping on violation. On finite
+    inputs the guard changes nothing — the returned trajectory stays
+    bitwise identical to an unguarded run.
     """
     if factors is not None and warm_start is not None:
         raise ValueError("pass factors= or warm_start=, not both")
@@ -175,18 +189,48 @@ def cp_als(at: AltoTensor, rank: int, n_iters: int = 50, tol: float = 1e-5,
     # calls, and a host-resident stream is not a jit operand. The dense
     # algebra still runs the same XLA kernels per op.
     sweep = sweep_fn if plan.streaming is not None else jax.jit(sweep_fn)
+    report = health_mod.HealthReport() if guard else None
     fits: list[float] = []
     prev_fit = -np.inf
     it = 0
     for it in range(1, n_iters + 1):
+        good = (factors, lam)
         factors, lam, M_last = sweep(at, views, factors, lam)
+        pd = faults.fire("cpals.nan")
+        if pd is not None:
+            # Poison the LAST factor: the next sweep's first mode update
+            # consumes it through the Gram products, so an unguarded run
+            # propagates the poison everywhere (the realistic hazard).
+            poison = pd.get("value", float("nan"))
+            factors = list(factors)
+            factors[-1] = factors[-1].at[0, 0].set(poison)
         fit = _fit_host(M_last, factors, lam, normX2)
+        if guard:
+            report.checks += 1
+            reason = None
+            if not np.isfinite(fit) or not health_mod.all_finite(
+                    [*factors, lam, M_last]):
+                reason = f"non-finite sweep output at iteration {it}"
+            elif fit < health_mod.FIT_FLOOR:
+                # Huge-but-finite iterate: must be stopped HERE — its
+                # Gram products overflow the next sweep (health.FIT_FLOOR)
+                reason = f"fit diverged to {fit:.3e} at iteration {it}"
+            elif fits and fit < fits[-1] - guard_slack:
+                reason = (f"fit regressed {fits[-1]:.6f} -> {fit:.6f} "
+                          f"at iteration {it}")
+            if reason is not None:
+                report.violations += 1
+                report.rolled_back = True
+                report.reason = reason
+                factors, lam = good
+                it -= 1
+                break
         fits.append(fit)
         if abs(fit - prev_fit) < tol:
             break
         prev_fit = fit
     return CpalsResult(lam=lam, factors=list(factors), fits=fits,
-                       n_iters=it, plan=plan)
+                       n_iters=it, plan=plan, health=report)
 
 
 def reconstruct_values(coords: jnp.ndarray, lam: jnp.ndarray,

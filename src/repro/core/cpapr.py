@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults
+from repro.core import health as health_mod
 from repro.core import heuristics
 from repro.core import ingest as ingest_mod
 from repro.core import plan as plan_mod
@@ -56,6 +58,8 @@ class CpaprResult:
     pi_policy: str
     traversals: list[str]
     plan: plan_mod.ExecutionPlan | None = None
+    # Guard outcome when the solve ran with guard=True (core.health).
+    health: health_mod.HealthReport | None = None
 
 
 def init_factors(dims: Sequence[int], rank: int, seed: int = 0,
@@ -191,7 +195,8 @@ def cp_apr(at: AltoTensor, rank: int, params: CpaprParams | None = None,
            views: dict[int, OrientedView] | None = None,
            track_ll: bool = False,
            plan: plan_mod.ExecutionPlan | None = None,
-           tune: str = "off", warm_start=None) -> CpaprResult:
+           tune: str = "off", warm_start=None,
+           guard: bool = False) -> CpaprResult:
     """CP-APR MU driver (Alg. 2). `pi_policy`: None=adaptive|'pre'|'otf'.
 
     ``warm_start`` seeds (λ, factors) from a previous solve — a
@@ -265,23 +270,41 @@ def cp_apr(at: AltoTensor, rank: int, params: CpaprParams | None = None,
                                           "p", "plan"))
 
     phi_prev = [jnp.zeros_like(A) for A in factors]
+    report = health_mod.HealthReport() if guard else None
     kkt_hist: list[float] = []
     ll_hist: list[float] = []
     n_inner_total = 0
     outer = 0
     for outer in range(1, p.k_max + 1):
+        # Last good state for the guard's rollback (references only —
+        # the arrays are immutable, nothing is copied).
+        good = (lam, list(factors), list(phi_prev))
         all_converged = True
         kkt_max = 0.0
         for n in range(N):
             A, lam, phi_n, conv, n_inner, kkt = update(
                 at, views.get(n), n, lam, factors, phi_prev[n],
                 first_outer=(outer == 1), pre_pi=pre_pi, p=p, plan=plan)
+            pd = faults.fire("cpapr.nan")
+            if pd is not None:
+                A = A.at[0, 0].set(pd.get("value", float("nan")))
             factors = list(factors)
             factors[n] = A
             phi_prev[n] = phi_n
             n_inner_total += int(n_inner)
             all_converged &= bool(conv)
             kkt_max = max(kkt_max, float(kkt))
+        if guard:
+            report.checks += 1
+            if not np.isfinite(kkt_max) or not health_mod.all_finite(
+                    [lam, *factors]):
+                report.violations += 1
+                report.rolled_back = True
+                report.reason = (f"non-finite mode update at outer "
+                                 f"iteration {outer}")
+                lam, factors, phi_prev = good
+                outer -= 1
+                break
         kkt_hist.append(kkt_max)
         if track_ll:
             ll_hist.append(float(log_likelihood(at, lam, factors)))
@@ -290,4 +313,4 @@ def cp_apr(at: AltoTensor, rank: int, params: CpaprParams | None = None,
     return CpaprResult(lam=lam, factors=factors, kkt_violations=kkt_hist,
                        log_likelihoods=ll_hist, n_outer=outer,
                        n_inner_total=n_inner_total, pi_policy=pi_policy,
-                       traversals=traversals, plan=plan)
+                       traversals=traversals, plan=plan, health=report)

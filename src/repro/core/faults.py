@@ -1,0 +1,256 @@
+"""Deterministic fault injection for the serving/streaming/ingest stack.
+
+Production-scale serving is defined by what happens on the bad day: a
+torn memmap, a device allocator returning RESOURCE_EXHAUSTED mid-bucket,
+a tenant whose update NaNs, a corrupted plan store. This module makes
+those days reproducible: every recoverable failure the runtime claims to
+survive has a *named site* threaded through the real hot path, and a
+test (or an operator, via ``$REPRO_FAULTS``) arms the site to fire a
+deterministic number of times. `tests/test_resilience.py` pins each
+recovery ladder against these sites; the CI resilience lane re-runs the
+suite under an env matrix of fault classes.
+
+Design constraints (the tentpole contract):
+
+* **Deterministic.** A site fires on its first ``times`` hits, then goes
+  quiet — no randomness, no clocks. Two runs with the same arming see
+  the same failures at the same call sites.
+* **Zero overhead disabled.** The fast path of :func:`fire` /
+  :func:`inject` is one module-global bool check; with nothing armed the
+  hot loops pay a single ``if`` per site. No site registers a host
+  callback inside jit: sites inside jit-traced code (`plan.execute_*`,
+  the in-core `kernels.ops` wrappers) fire at *trace time* only — which
+  is exactly when a bad plan's kernel build would fail for real — and
+  contribute nothing to the compiled executable.
+* **Scoped arming.** Tests use the :func:`injected` context manager;
+  operators/CI use ``REPRO_FAULTS="site[:times][,site...]"`` (parsed at
+  import; :func:`configure` re-reads). Unknown site names fail fast.
+
+Injected exceptions mimic their real counterparts so the recovery code
+paths cannot special-case injection: I/O sites raise an ``OSError``
+subclass, OOM sites raise with ``RESOURCE_EXHAUSTED`` in the message
+(what `jaxlib`'s allocator failures carry), NaN sites do not raise at
+all — they corrupt the value stream (the caller poisons its own state
+via :func:`fire`), which is how real non-finite faults arrive.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+
+# site name -> fault class. The docs fault-site table (docs/resilience.md)
+# is generated from this mapping; adding a site here without threading it
+# through a hot path is a docs-lane failure, not a silent no-op.
+SITES: dict[str, str] = {
+    "stream.memmap_load": "io",        # from_memmap: spilled stream read
+    "stream.chunk_io": "io",           # put_chunk: chunk page-in/transfer
+    "stream.respill": "interrupt",     # _respill: between tmps and replace
+    "stream.checksum": "corrupt",      # from_memmap: stored checksum flips
+    "ops.chunk_oom": "oom",            # chunked executors: per-chunk launch
+    "ops.exec": "dispatch",            # in-core kernel wrappers (trace time)
+    "plan.dispatch": "dispatch",       # execute_mttkrp/execute_phi routing
+    "autotune.store": "corrupt",       # load_store: plan-store JSON read
+    "ingest.merge": "interrupt",       # _append: before the jitted merge
+    "cpals.nan": "nan",                # poison a CP-ALS sweep's factors
+    "cpapr.nan": "nan",                # poison a CP-APR mode update
+    "batched.nan": "nan",              # poison one tenant slot in a bucket
+    "batched.sweep": "interrupt",      # batched drivers: before each sweep
+    "views.build": "io",               # view/stream cache build
+}
+
+
+class InjectedFault(RuntimeError):
+    """Base for raised injections (NOT for io — see InjectedIOError)."""
+
+
+class InjectedIOError(OSError):
+    """Transient I/O failure (torn page, vanished file, EIO)."""
+
+
+class InjectedResourceExhausted(InjectedFault):
+    """Mimics jaxlib's allocator failure; message carries the marker."""
+
+    def __init__(self, site: str):
+        super().__init__(f"RESOURCE_EXHAUSTED: injected at {site}")
+
+
+class InjectedInterrupt(InjectedFault):
+    """A program killed mid-flight (respill, merge, sweep)."""
+
+
+class InjectedDispatchError(InjectedFault):
+    """A plan whose kernel fails to build/dispatch (bad stored tiling)."""
+
+
+class InjectedCorruption(ValueError):
+    """Corrupted serialized state (mangled JSON, flipped bits). A
+    ValueError so the real corruption handlers (`autotune.load_store`
+    treats bad JSON as an empty store) catch it without special-casing
+    injection."""
+
+
+def _exception_for(site: str) -> BaseException:
+    kind = SITES[site]
+    if kind == "io":
+        return InjectedIOError(f"injected I/O error at {site}")
+    if kind == "oom":
+        return InjectedResourceExhausted(site)
+    if kind == "dispatch":
+        return InjectedDispatchError(f"injected dispatch failure at {site}")
+    if kind == "corrupt":
+        return InjectedCorruption(f"injected corruption at {site}")
+    return InjectedInterrupt(f"injected interrupt at {site}")
+
+
+def is_injected(exc: BaseException) -> bool:
+    return isinstance(exc, (InjectedFault, InjectedIOError,
+                            InjectedCorruption))
+
+
+def is_transient(exc: BaseException) -> bool:
+    """Worth a blind retry? I/O errors and allocator exhaustion are —
+    the next attempt reads a healthy page or a drained allocator. Wrong
+    plans / poisoned values are NOT: they need a degradation ladder."""
+    return isinstance(exc, OSError) or "RESOURCE_EXHAUSTED" in str(exc)
+
+
+@dataclasses.dataclass
+class _Arm:
+    remaining: int
+    data: dict
+    skip: int = 0          # hits to let through before the first fire
+
+
+_LOCK = threading.Lock()
+_ARMED: dict[str, _Arm] = {}
+_FIRED: dict[str, int] = {}
+# Fast-path flag: fire()/inject() read it unlocked. Python guarantees
+# atomic loads of the bool; stale reads only delay a *newly armed* fault
+# by one call on another thread, never fire a disarmed one incorrectly
+# (firing re-checks under the lock).
+_ENABLED = False
+
+
+def _refresh_enabled_locked() -> None:
+    global _ENABLED
+    _ENABLED = bool(_ARMED)
+
+
+def arm(site: str, times: int = 1, data: dict | None = None,
+        after: int = 0) -> None:
+    """Arm ``site`` to fire on its next ``times`` hits.
+
+    ``data`` rides along to the caller via :func:`fire` (e.g. which
+    tenant slot to poison, what value to poison with). ``after`` lets
+    the first ``after`` hits through untouched before the site starts
+    firing — deterministic placement ("fail on the Nth call"), e.g. a
+    sweep poison that must land once a fit history exists.
+    """
+    if site not in SITES:
+        raise ValueError(f"unknown fault site {site!r}; known: "
+                         f"{sorted(SITES)}")
+    if times < 1:
+        raise ValueError(f"times must be >= 1, got {times}")
+    if after < 0:
+        raise ValueError(f"after must be >= 0, got {after}")
+    with _LOCK:
+        _ARMED[site] = _Arm(remaining=int(times), data=dict(data or {}),
+                            skip=int(after))
+        _refresh_enabled_locked()
+
+
+def disarm(site: str) -> None:
+    with _LOCK:
+        _ARMED.pop(site, None)
+        _refresh_enabled_locked()
+
+
+def reset() -> None:
+    """Disarm everything and zero the fired counters."""
+    with _LOCK:
+        _ARMED.clear()
+        _FIRED.clear()
+        _refresh_enabled_locked()
+
+
+def armed(site: str) -> bool:
+    if not _ENABLED:
+        return False
+    with _LOCK:
+        return site in _ARMED
+
+
+def fired() -> dict[str, int]:
+    """Times each site actually fired (cumulative since `reset`)."""
+    with _LOCK:
+        return dict(_FIRED)
+
+
+def fire(site: str) -> dict | None:
+    """Hot-path hook: returns the arm's ``data`` if ``site`` fires now,
+    else None. One unlocked bool check when nothing is armed."""
+    if not _ENABLED:
+        return None
+    with _LOCK:
+        a = _ARMED.get(site)
+        if a is None:
+            return None
+        if a.skip > 0:
+            a.skip -= 1
+            return None
+        a.remaining -= 1
+        if a.remaining <= 0:
+            del _ARMED[site]
+            _refresh_enabled_locked()
+        _FIRED[site] = _FIRED.get(site, 0) + 1
+        return dict(a.data)
+
+
+def inject(site: str) -> None:
+    """Hot-path hook for raising sites: raises the site's exception class
+    if armed, else returns immediately (one bool check)."""
+    if not _ENABLED:
+        return
+    if fire(site) is not None:
+        raise _exception_for(site)
+
+
+@contextlib.contextmanager
+def injected(site: str, times: int = 1, data: dict | None = None,
+             after: int = 0):
+    """Scoped arming for tests: arms on entry, disarms on exit (whether
+    or not every shot was consumed)."""
+    arm(site, times=times, data=data, after=after)
+    try:
+        yield
+    finally:
+        disarm(site)
+
+
+def configure(spec: str | None) -> None:
+    """Replace the armed set from a ``$REPRO_FAULTS`` spec string.
+
+    Format: comma/semicolon-separated ``site`` or ``site:times``
+    entries, e.g. ``REPRO_FAULTS="stream.chunk_io:2,batched.nan"``.
+    Empty/None clears. Unknown sites raise (a typo'd matrix entry must
+    fail the lane, not silently test nothing).
+    """
+    reset()
+    if not spec:
+        return
+    for entry in spec.replace(";", ",").split(","):
+        entry = entry.strip()
+        if not entry:
+            continue
+        site, _, times = entry.partition(":")
+        arm(site.strip(), times=int(times) if times else 1)
+
+
+def configure_env() -> None:
+    """(Re-)read ``$REPRO_FAULTS``; called once at import."""
+    configure(os.environ.get("REPRO_FAULTS"))
+
+
+configure_env()

@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.core import alto
 from repro.core import encoding as enc_mod
+from repro.core import faults
 from repro.core import views as views_mod
 from repro.core.alto import AltoMeta, AltoTensor
 from repro.core.encoding import AltoEncoding, make_encoding
@@ -164,6 +165,10 @@ def _append(at: AltoTensor, delta, delta_values, new_dims: tuple[int, ...],
     fn = _merge_device_fn(old_enc, new_enc, L, M, int(at.words.shape[0]),
                           D, policy, bool(compute_reuse), at.values.dtype,
                           delta_form)
+    # Interruption site: the merge is functional (the resident tensor is
+    # never mutated), so a kill here leaves `at` fully serviceable and a
+    # retry re-runs the identical jitted program.
+    faults.inject("ingest.merge")
     out = fn(at.words, at.values, delta, delta_values)
     new_at = _finalize(out, new_enc, M + D, L, bool(compute_reuse))
     if invalidate_stale:

@@ -67,6 +67,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.core import faults
 from repro.core import heuristics
 from repro.core import mttkrp as core_mttkrp
 from repro.core.alto import AltoMeta, AltoTensor, OrientedView, delinearize
@@ -898,6 +899,7 @@ def execute_mttkrp(plan: ExecutionPlan, at: AltoTensor,
     (`core.stream.HostStream`) that `build_views` materialized in place
     of a device view.
     """
+    faults.inject("plan.dispatch")
     if plan.mesh is not None:
         from repro.dist import cpd as dist_cpd
         return dist_cpd.sharded_mttkrp(plan, at, views, factors, mode)
@@ -949,6 +951,7 @@ def execute_phi(plan: ExecutionPlan, at: AltoTensor,
     policy explicitly, defaulting to the plan's. ``pre`` is ignored on
     in-core routes, where the pi-vs-factors operand already encodes it.
     """
+    faults.inject("plan.dispatch")
     if (pi is None) == (factors is None):
         raise ValueError("pass exactly one of pi= / factors=")
     if plan.mesh is not None:

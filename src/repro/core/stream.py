@@ -39,17 +39,62 @@ from __future__ import annotations
 import dataclasses
 import os
 import pathlib
+import threading
+import zlib
 
 import jax
 import numpy as np
 
 from repro.core import encoding as enc_mod
+from repro.core import faults
 from repro.core.alto import AltoMeta, AltoTensor, OrientedView
 
 # One alignment for every host stream: a multiple of every legal oriented
 # block_m (powers of two in [plan.MIN_BLOCK_M, plan.MAX_BLOCK_M]), so one
 # padded copy serves any tiling. Must equal plan.MAX_BLOCK_M.
 STREAM_ALIGN = 1024
+
+
+class StreamIntegrityError(RuntimeError):
+    """A spilled stream's content checksum does not match its payload —
+    a torn multi-file write (crash between `_respill`'s replaces) or
+    on-disk corruption. Detected at LOAD time so a wrong stream never
+    reaches an executor; recovery is `load_or_rebuild`."""
+
+
+# Integrity accounting the serving stats surface (instead of log-scraping).
+_INTEGRITY_LOCK = threading.Lock()
+_INTEGRITY = {"checksum_failures": 0, "rebuilds": 0}
+
+
+def integrity_stats() -> dict[str, int]:
+    with _INTEGRITY_LOCK:
+        return dict(_INTEGRITY)
+
+
+def integrity_stats_clear() -> None:
+    with _INTEGRITY_LOCK:
+        for k in _INTEGRITY:
+            _INTEGRITY[k] = 0
+
+
+def _integrity_bump(counter: str) -> None:
+    with _INTEGRITY_LOCK:
+        _INTEGRITY[counter] += 1
+
+
+def stream_checksum(rows: np.ndarray, words: np.ndarray,
+                    values: np.ndarray) -> int:
+    """crc32 over the padded payload bytes (rows ‖ words ‖ values).
+
+    One sequential pass at spill/load time — for a memmap-backed stream
+    the verify pages the file in once, which is the price of never
+    handing a torn generation to the chunked executors.
+    """
+    c = zlib.crc32(np.ascontiguousarray(rows).tobytes())
+    c = zlib.crc32(np.ascontiguousarray(words).tobytes(), c)
+    c = zlib.crc32(np.ascontiguousarray(values).tobytes(), c)
+    return c & 0xFFFFFFFF
 
 
 @dataclasses.dataclass
@@ -68,6 +113,10 @@ class HostStream:
     rows: np.ndarray
     words: np.ndarray
     values: np.ndarray
+    # Content checksum of the padded payload (`stream_checksum`). None for
+    # in-memory streams (never at risk of a torn write); spilled streams
+    # carry it and `from_memmap` verifies it against the mapped bytes.
+    checksum: int | None = None
 
     def padded_len(self, block_m: int) -> int:
         """Stream length after `ops.pad_sorted_stream` at ``block_m``."""
@@ -160,19 +209,32 @@ def ensure_host(view) -> HostStream:
 def _respill(hs: HostStream, d: pathlib.Path) -> HostStream:
     """Write ``hs`` into ``d`` atomically and reopen it memory-mapped.
 
-    Each array goes to a ``.tmp`` sibling first and is moved into place
-    with ``os.replace`` — readers holding memmaps of the OLD files keep
-    the old inodes alive (no torn reads, no SIGBUS from a truncating
-    in-place ``np.save``), and a crash mid-spill leaves the previous
-    generation intact.
+    Two phases: every array is fully written to a ``.tmp`` sibling
+    first, then ALL tmps are moved into place with ``os.replace`` —
+    readers holding memmaps of the OLD files keep the old inodes alive
+    (no torn reads, no SIGBUS from a truncating in-place ``np.save``),
+    and a crash anywhere in the write phase leaves the previous
+    generation byte-identical on disk (the ``stream.respill`` fault site
+    sits between the phases; `tests/test_resilience.py` kills the spill
+    there and asserts the old stream still loads and verifies). A crash
+    *between replaces* can still tear across files — which is exactly
+    what the content checksum (written alongside, verified by
+    `from_memmap`) turns from silent corruption into a load-time
+    `StreamIntegrityError`.
     """
     d.mkdir(parents=True, exist_ok=True)
+    checksum = stream_checksum(hs.rows, hs.words, hs.values)
     payload = {"rows": np.asarray(hs.rows), "words": np.asarray(hs.words),
                "values": np.asarray(hs.values),
-               "length": np.asarray([hs.length], np.int64)}
+               "length": np.asarray([hs.length], np.int64),
+               "checksum": np.asarray([checksum], np.int64)}
+    tmps = {}
     for name, arr in payload.items():
         tmp = d / f".{name}.tmp.npy"
         np.save(tmp, arr)
+        tmps[name] = tmp
+    faults.inject("stream.respill")
+    for name, tmp in tmps.items():
         os.replace(tmp, d / f"{name}.npy")
     return from_memmap(d, hs.meta, hs.mode)
 
@@ -189,13 +251,53 @@ def to_memmap(hs: HostStream, directory) -> HostStream:
 
 
 def from_memmap(directory, meta: AltoMeta, mode: int) -> HostStream:
-    """Reopen a spilled stream (`to_memmap`) as read-only memmaps."""
+    """Reopen a spilled stream (`to_memmap`) as read-only memmaps.
+
+    Verifies the stored content checksum against the mapped payload
+    before returning — a generation torn across the per-array files
+    (crash between `_respill` replaces, disk corruption) raises
+    `StreamIntegrityError` here instead of producing a silently wrong
+    decomposition downstream. Pre-checksum spills (no ``checksum.npy``)
+    load unverified for compatibility.
+    """
+    faults.inject("stream.memmap_load")
     d = pathlib.Path(directory)
     length = int(np.load(d / "length.npy")[0])
-    return HostStream(meta=meta, mode=mode, length=length,
-                      rows=np.load(d / "rows.npy", mmap_mode="r"),
-                      words=np.load(d / "words.npy", mmap_mode="r"),
-                      values=np.load(d / "values.npy", mmap_mode="r"))
+    hs = HostStream(meta=meta, mode=mode, length=length,
+                    rows=np.load(d / "rows.npy", mmap_mode="r"),
+                    words=np.load(d / "words.npy", mmap_mode="r"),
+                    values=np.load(d / "values.npy", mmap_mode="r"))
+    cpath = d / "checksum.npy"
+    if cpath.exists():
+        stored = int(np.load(cpath)[0])
+        if faults.fire("stream.checksum") is not None:
+            stored ^= 1                       # simulate on-disk corruption
+        actual = stream_checksum(hs.rows, hs.words, hs.values)
+        if stored != actual:
+            _integrity_bump("checksum_failures")
+            raise StreamIntegrityError(
+                f"spilled stream at {d} fails its checksum "
+                f"(stored {stored:#010x}, payload {actual:#010x}) — "
+                f"torn write or corruption; rebuild from source "
+                f"(stream.load_or_rebuild)")
+        hs.checksum = stored
+    return hs
+
+
+def load_or_rebuild(directory, at: AltoTensor, mode: int) -> HostStream:
+    """`from_memmap` with the rebuild-from-source recovery rung.
+
+    A checksum-failing (or unreadable) spill is rebuilt from the
+    resident tensor — `host_stream` + a fresh atomic spill into the same
+    directory — so one torn write costs a re-sort and a re-write, never
+    a wrong answer or a dead tensor. The serving runtime counts these
+    (``rebuilds`` in `integrity_stats`).
+    """
+    try:
+        return from_memmap(directory, at.meta, mode)
+    except (StreamIntegrityError, OSError):
+        _integrity_bump("rebuilds")
+        return _respill(host_stream(at, mode), pathlib.Path(directory))
 
 
 def append_stream(hs: HostStream, at_new: AltoTensor) -> HostStream:
@@ -223,6 +325,7 @@ def put_chunk(hs: HostStream, start: int, stop: int):
     NEXT chunk's put before computing on the current one overlaps copy
     with compute (the double-buffer loop in `kernels.ops`).
     """
+    faults.inject("stream.chunk_io")
     rows, words, values = hs.chunk(start, stop)
     return (jax.device_put(rows), jax.device_put(words),
             jax.device_put(values))

@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import alto
+from repro.core import faults
 from repro.core import stream as stream_mod
 from repro.core.alto import AltoTensor, OrientedView
 from repro.core.stream import HostStream
@@ -208,6 +209,9 @@ def get_view(at: AltoTensor, mode: int,
     key = ("view", *mode_fingerprint(at, mode))
 
     def build():
+        # Injection here exercises the latch's failed-build contract: the
+        # owner's exception releases waiters and the next caller rebuilds.
+        faults.inject("views.build")
         route_ = route or default_route()
         return (alto.oriented_view_device(at, mode)
                 if route_ == "device" else alto.oriented_view(at, mode))
@@ -227,9 +231,12 @@ def get_stream(at: AltoTensor, mode: int) -> HostStream:
     pinned by `tests/test_outofcore.py`).
     """
     key = ("stream", *mode_fingerprint(at, mode))
-    return _rebind_meta(
-        key, _get_or_build(key, lambda: stream_mod.host_stream(at, mode)),
-        at)
+
+    def build():
+        faults.inject("views.build")
+        return stream_mod.host_stream(at, mode)
+
+    return _rebind_meta(key, _get_or_build(key, build), at)
 
 
 def build_views(at: AltoTensor, plan, route: str | None = None) -> dict:

@@ -30,6 +30,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import faults
 from repro.core import stream as _stream
 from repro.core.alto import AltoTensor, OrientedView
 from repro.core.alto import delinearize as _delin_jnp
@@ -250,6 +251,8 @@ def mttkrp(at: AltoTensor, factors, mode: int,
     interp = _auto_interpret(interpret)
     rb = r_block or factors[mode].shape[1]
 
+    faults.inject("ops.exec")
+
     def build():
         def run(words, values, part_start, factors):
             partials = _mttkrp.mttkrp_partials_pallas(
@@ -272,6 +275,8 @@ def mttkrp_oriented(view: OrientedView, factors,
     mode = view.mode
     interp = _auto_interpret(interpret)
     rb = r_block or factors[mode].shape[1]
+
+    faults.inject("ops.exec")
 
     def build():
         def run(rows, words, values, factors):
@@ -305,6 +310,8 @@ def mttkrp_oriented_carry(view: OrientedView, factors,
     interp = _auto_interpret(interpret)
     rb = r_block or factors[mode].shape[1]
 
+    faults.inject("ops.exec")
+
     def build():
         def run(rows, words, values, factors):
             rows, words, values, _ = pad_sorted_stream(rows, words, values,
@@ -327,6 +334,8 @@ def cpapr_phi(at: AltoTensor, B: jnp.ndarray, mode: int,
     meta = at.meta
     interp = _auto_interpret(interpret)
     pre_pi = pi is not None
+
+    faults.inject("ops.exec")
 
     def build():
         def run(words, values, part_start, B, factors, pi):
@@ -354,6 +363,8 @@ def cpapr_phi_oriented(view: OrientedView, B: jnp.ndarray,
     interp = _auto_interpret(interpret)
     pre_pi = pi is not None
 
+    faults.inject("ops.exec")
+
     def build():
         def run(rows, words, values, B, factors, pi):
             rows, words, values, pi = pad_sorted_stream(rows, words, values,
@@ -380,6 +391,8 @@ def cpapr_phi_oriented_carry(view: OrientedView, B: jnp.ndarray,
     mode = view.mode
     interp = _auto_interpret(interpret)
     pre_pi = pi is not None
+
+    faults.inject("ops.exec")
 
     def build():
         def run(rows, words, values, B, factors, pi):
@@ -469,6 +482,7 @@ def mttkrp_oriented_chunked(view, factors, *, chunk_m: int,
 
     nxt = _stream.put_chunk(hs, *bounds[0])
     for i, (s, e) in enumerate(bounds):
+        faults.inject("ops.chunk_oom")
         cur = nxt
         if i + 1 < len(bounds):                # prefetch ahead of compute
             nxt = _stream.put_chunk(hs, *bounds[i + 1])
@@ -510,6 +524,7 @@ def mttkrp_oriented_chunked_reference(view, factors, *,
 
     nxt = _stream.put_chunk(hs, *bounds[0])
     for i, (s, e) in enumerate(bounds):
+        faults.inject("ops.chunk_oom")
         cur = nxt
         if i + 1 < len(bounds):
             nxt = _stream.put_chunk(hs, *bounds[i + 1])
@@ -563,6 +578,7 @@ def cpapr_phi_oriented_chunked(view, B: jnp.ndarray, factors, *,
 
     nxt = _stream.put_chunk(hs, *bounds[0])
     for i, (s, e) in enumerate(bounds):
+        faults.inject("ops.chunk_oom")
         cur = nxt
         if i + 1 < len(bounds):
             nxt = _stream.put_chunk(hs, *bounds[i + 1])
@@ -610,6 +626,7 @@ def cpapr_phi_oriented_chunked_reference(view, B: jnp.ndarray, factors, *,
 
     nxt = _stream.put_chunk(hs, *bounds[0])
     for i, (s, e) in enumerate(bounds):
+        faults.inject("ops.chunk_oom")
         cur = nxt
         if i + 1 < len(bounds):
             nxt = _stream.put_chunk(hs, *bounds[i + 1])

@@ -25,7 +25,7 @@ def test_docs_pages_exist():
     for required in ("architecture.md", "alto-format.md", "distributed.md",
                      "benchmarks.md", "known-issues.md", "autotuning.md",
                      "serving.md", "out-of-core.md",
-                     "dynamic-tensors.md"):
+                     "dynamic-tensors.md", "resilience.md"):
         assert required in names, f"docs/{required} missing"
 
 
