@@ -7,24 +7,51 @@ is never touched) and emits paired rows from the tuner's own report:
     autotune/zipf_small/mode0/static,3333.1,traversal=oriented;r_block=16;block_m=1024
     autotune/zipf_small/mode0/measured,265.2,traversal=oriented;r_block=16;block_m=128;candidates=9
 
-Both timings come from the SAME median-of-k sweep (`ops.median_time`
+Both timings come from the SAME median-of-k sweep (`ops.timing_stats`
 through the compiled-executable cache), so measured ≤ static holds by
 construction: the static analytic choice is candidate 0 of the space the
 winner is the argmin of. A final `store_hit` row per tensor confirms the
 persisted plan round-trips with zero timing runs.
+
+The `search` rows are the budgeted-search acceptance gate: on the same
+tensor and the same (now sample-warm) store, `core.search.search_plan`
+gets a run budget of ceil(25% of the exhaustive tuner's timing runs) —
+counted through the real `ops.timing_runs()` deltas on both sides — and
+its winner must execute within 5% of the exhaustive winner (ratio 1.0
+short-circuits when the winning plans are identical; otherwise both
+plans are re-measured back-to-back through the same protocol).
 """
 from __future__ import annotations
 
+import math
 import os
 import tempfile
 
 from benchmarks.common import emit, plan_comparison_tensors
 
 RANK = 16
+SEARCH_RUN_FRACTION = 0.25     # of the exhaustive tuner's timing runs
+SEARCH_TIME_SLACK = 1.05       # search winner within 5% of exhaustive
+
+
+def _plan_time_s(at, plan, factors, iters=5):
+    """Sum of the per-mode winner medians, same protocol as both tuners."""
+    from repro.core import plan as plan_mod, search as search_mod
+
+    views = plan_mod.build_views(at, plan)
+    total = 0.0
+    for mode in range(at.meta.enc.ndim):
+        median, _ = search_mod._time_mttkrp(plan, at, views, factors,
+                                            mode, 1, iters)
+        total += median
+    return total
 
 
 def run(quick: bool = False):
-    from repro.core import alto, autotune, plan as plan_mod
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import alto, autotune, plan as plan_mod, search
     from repro.kernels import ops
 
     tensors = plan_comparison_tensors()
@@ -38,10 +65,12 @@ def run(quick: bool = False):
                 kwargs["nnz"] = min(kwargs["nnz"], 5_000)
             x = fn(**kwargs)
             at = alto.build(x, n_partitions=32)
+            runs_exh0 = ops.timing_runs()
             plan, report = autotune.tune_plan(
                 at, RANK, backend="pallas",
                 max_candidates=6 if quick else 12,
                 store_path=store)
+            exhaustive_runs = ops.timing_runs() - runs_exh0
             for mr in report.modes:
                 s, b = mr.static, mr.best
                 emit(f"autotune/{name}/mode{mr.mode}/static",
@@ -61,3 +90,34 @@ def run(quick: bool = False):
             emit(f"autotune/{name}/store_hit", 0.0,
                  f"identical={hit};timing_runs=0")
             assert hit, f"store round-trip failed for {name}"
+
+            # --- budgeted search vs exhaustive (the acceptance gate) ---
+            budget = max(1, math.ceil(SEARCH_RUN_FRACTION
+                                      * exhaustive_runs))
+            runs_s0 = ops.timing_runs()
+            splan, srep = search.search_plan(
+                at, RANK, backend="pallas", budget_runs=budget, seed=0,
+                persist=False, store_path=store)
+            search_runs = ops.timing_runs() - runs_s0
+            assert search_runs == srep.runs_used, (name, search_runs,
+                                                   srep.runs_used)
+            assert search_runs <= budget, (name, search_runs, budget)
+            if splan.modes == plan.modes:
+                ratio = 1.0        # identical winners: same measured time
+            else:
+                rng = np.random.default_rng(0)
+                factors = [jnp.asarray(rng.standard_normal((I, RANK))
+                                       .astype(np.float32))
+                           for I in at.meta.dims]
+                t_search = _plan_time_s(at, splan, factors)
+                t_exh = _plan_time_s(at, plan, factors)
+                ratio = t_search / t_exh
+            winners = ";".join(
+                f"mode{w.mode}={w.traversal},rb{w.r_block},bm{w.block_m}"
+                for w in srep.winners)
+            emit(f"autotune/{name}/search", ratio,
+                 f"runs={search_runs};exhaustive_runs={exhaustive_runs};"
+                 f"budget={budget};ratio={ratio:.3f};"
+                 f"model_samples={srep.model_samples};"
+                 f"neighbors={srep.neighbors};{winners}")
+            assert ratio <= SEARCH_TIME_SLACK, (name, ratio)

@@ -7,13 +7,14 @@ from repro.core.alto import (AltoTensor, AltoMeta, OrientedView, build,
                              to_sparse, merge_coo, merge_reference,
                              grown_dims)
 from repro.core import (autotune, batched, faults, health, heuristics,
-                        ingest, mttkrp, plan, cpals, cpapr, shapeclass,
-                        stream, views)
+                        ingest, mttkrp, plan, cpals, cpapr, search,
+                        shapeclass, stream, views)
 from repro.core.ingest import append_delta, append_linearized, grow_factors
 from repro.core.heuristics import Traversal
 from repro.core.plan import (ExecutionPlan, ModePlan, make_plan,
                              make_class_plan, resident_bytes)
 from repro.core.autotune import tune_plan
+from repro.core.search import search_plan
 from repro.core.shapeclass import ShapeClass, classify, pad_to_class
 from repro.core.batched import batched_cp_als, batched_cp_apr
 from repro.core.views import get_view
@@ -24,10 +25,10 @@ __all__ = [
     "oriented_view_device", "linearize", "delinearize", "to_sparse",
     "merge_coo", "merge_reference", "grown_dims",
     "autotune", "batched", "faults", "health", "heuristics", "ingest",
-    "mttkrp", "plan", "cpals", "cpapr", "shapeclass", "stream", "views",
-    "append_delta", "append_linearized", "grow_factors",
+    "mttkrp", "plan", "cpals", "cpapr", "search", "shapeclass", "stream",
+    "views", "append_delta", "append_linearized", "grow_factors",
     "Traversal", "ExecutionPlan", "ModePlan", "make_plan",
-    "make_class_plan", "resident_bytes", "tune_plan",
+    "make_class_plan", "resident_bytes", "tune_plan", "search_plan",
     "ShapeClass", "classify", "pad_to_class",
     "batched_cp_als", "batched_cp_apr", "get_view",
 ]

@@ -58,7 +58,11 @@ from repro.core.alto import AltoMeta, AltoTensor, delinearize
 # v2: the ORIENTED_CARRY traversal joined the candidate space. Bumping the
 # store version makes every pre-carry store load as empty (stale winners,
 # measured without the carry candidates, must not mask the new traversal).
-PLAN_STORE_VERSION = 2
+# v3: streaming plans joined the store (records carry a ``streaming``
+# chunk block, keys a ``dev=`` component) and records carry measurement
+# ``samples`` that train the search cost model (`core.search`). Pre-search
+# v2 stores load as empty — never clobbered until the first new write.
+PLAN_STORE_VERSION = 3
 PLAN_CACHE_ENV = "REPRO_PLAN_CACHE"
 DEFAULT_STORE = "~/.cache/repro/plans.json"
 
@@ -94,7 +98,8 @@ def plan_key(meta: AltoMeta, rank: int, backend: str, *,
              vmem_limit: int = plan_mod.VMEM_BYTES,
              fast_mem_bytes: int = heuristics.DEFAULT_FAST_MEM_BYTES,
              objective: str = "mttkrp",
-             platform: str | None = None) -> str:
+             platform: str | None = None,
+             device_bytes: int | None = None) -> str:
     """Stable store key: sha256 over everything a measurement depends on.
 
     ``platform`` (``jax.default_backend()``) is part of the key so
@@ -102,7 +107,10 @@ def plan_key(meta: AltoMeta, rank: int, backend: str, *,
     and ``jax.__version__`` so a toolchain upgrade re-measures.
     ``objective`` keeps mttkrp- and Φ-tuned plans apart (their winners
     differ), and ``fast_mem_bytes`` pins the Π-policy decision baked
-    into the stored plan.
+    into the stored plan. ``device_bytes`` is the out-of-core budget a
+    *streaming* plan was sized against (None for in-core plans — the
+    same tensor tuned in core and tuned against a chunking budget are
+    different measurements and must never share a record).
     """
     platform = platform or jax.default_backend()
     blob = "|".join([
@@ -116,6 +124,7 @@ def plan_key(meta: AltoMeta, rank: int, backend: str, *,
         f"vmem={vmem_limit}",
         f"fast_mem={fast_mem_bytes}",
         f"objective={objective}",
+        f"dev={device_bytes}",
         f"jax={jax.__version__}",
     ])
     return hashlib.sha256(blob.encode()).hexdigest()[:32]
@@ -223,6 +232,12 @@ def serialize_plan(plan: plan_mod.ExecutionPlan) -> dict:
             "vmem_bytes": m.vmem_bytes,
             "phi_vmem_bytes": m.phi_vmem_bytes,
         } for m in plan.modes],
+        "streaming": None if plan.streaming is None else {
+            "chunk_m": plan.streaming.chunk_m,
+            "n_chunks": plan.streaming.n_chunks,
+            "device_bytes": plan.streaming.device_bytes,
+            "stream_bytes": plan.streaming.stream_bytes,
+        },
         "dims": list(plan.meta.dims),
         "nnz": plan.meta.nnz,
     }
@@ -252,11 +267,29 @@ def deserialize_plan(record: dict, meta: AltoMeta, *,
         if m.r_block <= 0 or rank % m.r_block:
             raise ValueError(f"stored r_block {m.r_block} does not divide "
                              f"rank {rank}")
+    streaming = None
+    s = record.get("streaming")
+    if s is not None:
+        if mesh is not None:
+            raise ValueError("streaming records do not compose with mesh")
+        chunk_m = int(s["chunk_m"])
+        align = max(m.block_m for m in modes)
+        if chunk_m <= 0 or chunk_m % align:
+            raise ValueError(f"stored chunk_m {chunk_m} is not a multiple "
+                             f"of the plan's max block_m {align}")
+        # n_chunks is a pure function of (meta, chunk_m): recompute
+        # rather than trust the record, so a stale count can't desync
+        # the executed grid from the stream.
+        streaming = plan_mod.StreamPlan(
+            chunk_m=chunk_m,
+            n_chunks=plan_mod.chunk_count(meta, chunk_m),
+            device_bytes=int(s["device_bytes"]),
+            stream_bytes=int(s["stream_bytes"]))
     return plan_mod.ExecutionPlan(
         meta=meta, rank=rank, backend=str(record["backend"]),
         interpret=interpret,
         pi_policy=heuristics.PiPolicy(record["pi_policy"]),
-        modes=modes, mesh=mesh)
+        modes=modes, mesh=mesh, streaming=streaming)
 
 
 def lookup(meta: AltoMeta, rank: int, *, backend: str,
@@ -264,13 +297,16 @@ def lookup(meta: AltoMeta, rank: int, *, backend: str,
            fast_mem_bytes: int = heuristics.DEFAULT_FAST_MEM_BYTES,
            objective: str = "mttkrp",
            mesh=None, interpret: bool | None = None,
+           device_bytes: int | None = None,
            path=None) -> plan_mod.ExecutionPlan | None:
     """Stored measured plan for this configuration, or None. Zero timing
-    runs either way."""
+    runs either way. ``device_bytes`` selects the streaming record for
+    that out-of-core budget (None = the in-core record)."""
     n_shards = 1 if mesh is None else int(mesh.shape[mesh.axis_names[0]])
     key = plan_key(meta, rank, backend, n_shards=n_shards,
                    dtype_bytes=dtype_bytes, vmem_limit=vmem_limit,
-                   fast_mem_bytes=fast_mem_bytes, objective=objective)
+                   fast_mem_bytes=fast_mem_bytes, objective=objective,
+                   device_bytes=device_bytes)
     record = load_store(path).get(key)
     if record is None:
         return None
@@ -486,8 +522,10 @@ def tune_plan(at: AltoTensor, rank: int, *, backend: str | None = None,
                    fast_mem_bytes=fast_mem_bytes, objective=objective)
     stored = ""
     if persist:
+        from repro.core import search as search_mod
         record = serialize_plan(plan)
         record["tuned"] = {
+            "mode": "exhaustive",
             "platform": jax.default_backend(),
             "objective": objective,
             "warmup": warmup,
@@ -499,6 +537,21 @@ def tune_plan(at: AltoTensor, rank: int, *, backend: str | None = None,
                 "n_candidates": len(r.candidates),
             } for r in reports],
         }
+        # Every exhaustive measurement doubles as a training sample for
+        # the search cost model (`core.search`): exhaustive runs warm
+        # the model that later budgeted searches rank candidates with.
+        samples = []
+        for r in reports:
+            for c in r.candidates:
+                samples.append({
+                    "f": [round(f, 6) for f in search_mod.gene_features(
+                        meta, rank, r.mode,
+                        heuristics.Traversal(c.traversal), c.r_block,
+                        c.block_m, objective=objective,
+                        dtype_bytes=dtype_bytes)],
+                    "s": c.median_s,
+                })
+        record["samples"] = samples[:search_mod.MAX_RECORD_SAMPLES]
         plans = load_store(store_path)
         plans[key] = record
         stored = str(save_store(plans, store_path))
@@ -514,19 +567,45 @@ def tuned_plan(meta: AltoMeta, rank: int, *, backend: str,
                interpret: bool | None, dtype_bytes: int, vmem_limit: int,
                fast_mem_bytes: int, mesh, at: AltoTensor | None,
                require: bool, objective: str = "mttkrp",
+               search: bool = False, device_bytes: int | None = None,
+               search_budget_runs: int | None = None,
+               search_budget_s: float | None = None,
+               search_seed: int = 0,
                store_path=None) -> plan_mod.ExecutionPlan | None:
     """Store lookup, else measured tuning; ``None`` tells `make_plan` to
-    fall back to the static analytic plan (tune="auto" with no data)."""
+    fall back to the static analytic plan (tune="auto" with no data).
+
+    ``search=True`` (``tune="search"``) routes the measurement through
+    the budgeted GA + cost-model engine (`core.search`) instead of the
+    exhaustive tuner. ``device_bytes`` non-None marks a *streaming*
+    plan: those always tune through the search engine (the exhaustive
+    tuner's jitted timing closures cannot take a host-resident stream,
+    and chunk_m is part of the search genome, not the exhaustive
+    space) and are stored under a device-budget-keyed record. Mesh
+    plans keep the exhaustive path — the sharded timing protocol lives
+    there (streaming+mesh is rejected upstream by `make_plan`).
+    """
     hit = lookup(meta, rank, backend=backend, dtype_bytes=dtype_bytes,
                  vmem_limit=vmem_limit, fast_mem_bytes=fast_mem_bytes,
                  objective=objective, mesh=mesh, interpret=interpret,
-                 path=store_path)
+                 device_bytes=device_bytes, path=store_path)
     if hit is not None:
         return hit
     if at is not None:
         if at.meta != meta:
             raise ValueError("tune: at.meta does not match the meta the "
                              "plan is being built for")
+        if (search or device_bytes is not None) and mesh is None:
+            from repro.core import search as search_mod
+            plan, _ = search_mod.search_plan(
+                at, rank, backend=backend, interpret=interpret,
+                dtype_bytes=dtype_bytes, vmem_limit=vmem_limit,
+                fast_mem_bytes=fast_mem_bytes, objective=objective,
+                device_bytes=device_bytes,
+                budget_runs=search_budget_runs,
+                budget_s=search_budget_s, seed=search_seed,
+                store_path=store_path)
+            return plan
         plan, _ = tune_plan(at, rank, backend=backend, interpret=interpret,
                             dtype_bytes=dtype_bytes, vmem_limit=vmem_limit,
                             fast_mem_bytes=fast_mem_bytes, mesh=mesh,

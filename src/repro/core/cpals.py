@@ -132,7 +132,7 @@ def cp_als(at: AltoTensor, rank: int, n_iters: int = 50, tol: float = 1e-5,
            gram_fn=None, tune: str = "off",
            warm_start=None, guard: bool = False,
            guard_slack: float = 1e-3) -> CpalsResult:
-    """CP-ALS driver. ``tune`` ("off"|"auto"|"force") selects measured
+    """CP-ALS driver. ``tune`` ("off"|"auto"|"force"|"search") selects measured
     plans from the autotuner's persistent store — the tensor data is in
     hand here, so a store miss under "auto"/"force" runs the measured
     tuner (`core.autotune`) before the first sweep.

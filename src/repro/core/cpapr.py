@@ -212,7 +212,7 @@ def cp_apr(at: AltoTensor, rank: int, params: CpaprParams | None = None,
     `plan.build_views`): device-built by default, shared with CP-ALS and
     the autotuner — a tensor decomposed by both drivers materializes
     each mode's view once. ``tune``
-    ("off"|"auto"|"force") swaps the analytic plan for a measured one
+    ("off"|"auto"|"force"|"search") swaps the analytic plan for a measured one
     from the autotuner's persistent store (`core.autotune`), timing
     candidates here if the store misses — the tensor data is in hand.
     CP-APR tunes against the fused Φ kernel (objective="phi"), its >99%

@@ -728,6 +728,9 @@ def make_plan(meta: AltoMeta, rank: int, *, backend: str | None = None,
               tune: str = "off",
               tune_objective: str = "mttkrp",
               at: "AltoTensor | None" = None,
+              search_budget: int | None = None,
+              search_seconds: float | None = None,
+              search_seed: int = 0,
               store_path=None) -> ExecutionPlan:
     """Resolve heuristics + static meta into a concrete execution plan.
 
@@ -752,6 +755,18 @@ def make_plan(meta: AltoMeta, rank: int, *, backend: str | None = None,
     * ``"force"`` — like ``"auto"`` but never silently fall back: a store
       miss with no ``at=`` raises, so the caller knows it is NOT running
       a measured plan.
+    * ``"search"`` — like ``"auto"`` but a store miss (with ``at=``)
+      runs the *budgeted* GA + cost-model search (`core.search`)
+      instead of the exhaustive tuner; ``search_budget`` caps the
+      timing runs, ``search_seconds`` the measurement wall-clock, and
+      ``search_seed`` pins the search's RNG (deterministic candidate
+      schedule). Mesh plans fall back to the exhaustive tuner (the
+      sharded timing protocol lives there).
+
+    Streaming plans (``device_bytes`` overflow) tune through the search
+    engine under every mode but ``"off"`` — ``StreamPlan.chunk_m`` is
+    part of the search genome, and the store records/keys the winner
+    per device budget.
 
     ``tune_objective`` names the kernel the measurement ranks by —
     ``"mttkrp"`` (CP-ALS, the default) or ``"phi"`` (CP-APR; `cp_apr`
@@ -765,7 +780,7 @@ def make_plan(meta: AltoMeta, rank: int, *, backend: str | None = None,
     backend = backend or default_backend()
     if backend not in ("pallas", "reference"):
         raise ValueError(f"unknown backend {backend!r}")
-    if tune not in ("off", "auto", "force"):
+    if tune not in ("off", "auto", "force", "search"):
         raise ValueError(f"unknown tune mode {tune!r}")
     if device_bytes is None:
         device_bytes = default_device_bytes()
@@ -776,10 +791,6 @@ def make_plan(meta: AltoMeta, rank: int, *, backend: str | None = None,
         raise ValueError("out-of-core streaming does not compose with "
                          "mesh-sharded plans yet (shard first, then size "
                          "device_bytes per shard)")
-    if streaming_needed and tune != "off":
-        raise ValueError("streaming plans cannot be autotuned yet: the "
-                         "plan store has no chunk dimension "
-                         "(pass tune='off' with device_bytes=)")
     if tune != "off":
         from repro.core import autotune
         tuned = autotune.tuned_plan(
@@ -787,6 +798,10 @@ def make_plan(meta: AltoMeta, rank: int, *, backend: str | None = None,
             dtype_bytes=dtype_bytes, vmem_limit=vmem_limit,
             fast_mem_bytes=fast_mem_bytes, mesh=mesh, at=at,
             require=(tune == "force"), objective=tune_objective,
+            search=(tune == "search"),
+            device_bytes=device_bytes if streaming_needed else None,
+            search_budget_runs=search_budget,
+            search_budget_s=search_seconds, search_seed=search_seed,
             store_path=store_path)
         if tuned is not None:
             return tuned

@@ -101,16 +101,24 @@ def timing_runs() -> int:
         return _TIMING_RUNS
 
 
-def median_time(fn: Callable, *args, warmup: int = 1,
-                iters: int = 3) -> float:
-    """Median wall-clock seconds of a blocking call, after warmup.
+def timing_stats(fn: Callable, *args, warmup: int = 1,
+                 iters: int = 3) -> tuple[float, float]:
+    """(median, IQR) wall-clock seconds of a blocking call, after warmup.
 
     The autotuner's timing hook on the cached executables: ``fn`` is one
     of the public wrappers above (or any callable ending in a jitted
     call), so the warmup runs absorb compilation + the executable-cache
-    fill and the timed iterations hit jit's C++ fast path. Median of
-    ``iters`` (not best-of) so one descheduled run cannot crown a wrong
-    candidate on a noisy host.
+    fill and the timed iterations hit jit's C++ fast path. Warmup calls
+    are run but never timed — they cannot enter the sample at all, so a
+    slow first (compiling) call can't skew the statistics. The median is
+    the true sample median (middle-pair average for even ``iters``, not
+    the upper-middle element), robust against one descheduled run; the
+    IQR (Q3 − Q1, nearest-rank quartiles) is the measurement's own
+    spread estimate — search fitness comparisons can treat two medians
+    closer than their IQRs as a tie instead of crowning noise.
+
+    One call == one measurement for the `timing_runs` counter contract,
+    regardless of ``warmup``/``iters``.
     """
     global _TIMING_RUNS
     # Unsynchronized `+= 1` loses updates under concurrent autotuning,
@@ -126,7 +134,24 @@ def median_time(fn: Callable, *args, warmup: int = 1,
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2]
+    n = len(times)
+    if n % 2:
+        median = times[n // 2]
+    else:
+        median = 0.5 * (times[n // 2 - 1] + times[n // 2])
+    # Nearest-rank quartiles: exact enough for the small n the tuner
+    # uses, and degenerate (IQR=0) at n=1 as it should be.
+    q1 = times[n // 4]
+    q3 = times[min(n - 1, (3 * n) // 4)]
+    return median, max(0.0, q3 - q1)
+
+
+def median_time(fn: Callable, *args, warmup: int = 1,
+                iters: int = 3) -> float:
+    """Median wall-clock seconds of a blocking call (see `timing_stats`;
+    this is the stats' median alone, one counted measurement either way).
+    """
+    return timing_stats(fn, *args, warmup=warmup, iters=iters)[0]
 
 
 # ---------------------------------------------------------------------------

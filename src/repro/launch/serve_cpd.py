@@ -140,7 +140,9 @@ class CpdService:
                  tune: str = "auto", backend: str | None = None,
                  retain_results: int = 128, guard: bool = True,
                  max_wait_s: float | None = None, max_retries: int = 2,
-                 retry_base_s: float = 0.02):
+                 retry_base_s: float = 0.02,
+                 search_budget: int | None = None,
+                 search_budgets: dict | None = None):
         if algorithm not in ("cp_als", "cp_apr"):
             raise ValueError(f"unknown algorithm {algorithm!r}")
         self.rank = int(rank)
@@ -152,6 +154,14 @@ class CpdService:
         self.tol = float(tol)
         self.tune = tune
         self.backend = backend
+        # Budgeted-search warm start (tune="search"): a class-keyed run
+        # budget per ShapeClass, falling back to the flat default. High
+        # -traffic classes deserve more measurements than one-off shapes;
+        # None everywhere = the search engine's own default (25% of the
+        # feasible space). Ignored under the other tune modes.
+        self.search_budget = (None if search_budget is None
+                              else int(search_budget))
+        self.search_budgets = dict(search_budgets or {})
         self.guard = bool(guard)
         # Deadline-aware flush: a partial bucket whose oldest request
         # has waited this long is flushed without waiting for capacity.
@@ -356,7 +366,8 @@ class CpdService:
         plan = plan_mod.make_class_plan(
             sc, backend=self.backend, tune=self.tune,
             tune_objective=self._objective(),
-            at=at_canonical)
+            at=at_canonical,
+            search_budget=self.search_budgets.get(sc, self.search_budget))
         with self._lock:
             return self._plans.setdefault(sc, plan)
 
@@ -751,10 +762,19 @@ def main(argv=None):
     ap.add_argument("--max-wait-s", type=float, default=0.05,
                     help="deadline-aware partial-bucket flush budget "
                          "(worker mode)")
+    ap.add_argument("--tune", default="auto",
+                    choices=["off", "auto", "force", "search"],
+                    help="plan selection: analytic, store-backed "
+                         "exhaustive, or budgeted search")
+    ap.add_argument("--search-budget", type=int, default=None,
+                    help="timing-run budget per class under "
+                         "--tune search (default: the engine's 25%% "
+                         "of the feasible space)")
     args = ap.parse_args(argv)
 
     svc = CpdService(args.rank, args.algorithm, capacity=args.capacity,
-                     n_iters=args.iters,
+                     n_iters=args.iters, tune=args.tune,
+                     search_budget=args.search_budget,
                      max_wait_s=(args.max_wait_s if args.worker else None))
     rng = np.random.default_rng(args.seed)
     shapes = [(9, 7, 5), (12, 6, 8), (16, 8, 8), (30, 20, 10)]

@@ -224,6 +224,52 @@ class TestStoreRobustness:
                  for c in mr.candidates}
         assert "oriented_carry" in timed
 
+    def test_pre_search_v2_store_loads_as_empty_without_clobber(self,
+                                                                store):
+        """A version-2 store predates the streaming/search records (no
+        ``streaming`` block, no ``dev=`` key component, no cost-model
+        ``samples``): it must load as EMPTY — and the stale file must
+        stay byte-identical on disk through any number of loads and
+        lookups, only replaced by the first new write."""
+        assert autotune.PLAN_STORE_VERSION >= 3
+        at = _tensor()
+        _tune(at)
+        payload = json.loads(store.read_text())
+        payload["version"] = 2                  # a pre-search store file
+        store.write_text(json.dumps(payload))
+        raw = store.read_bytes()
+        assert autotune.load_store() == {}      # pre-search == empty
+        assert store.read_bytes() == raw        # load never writes
+        assert autotune.lookup(at.meta, RANK, backend="pallas") is None
+        runs = ops.timing_runs()
+        assert plan_mod.make_plan(at.meta, RANK, backend="pallas",
+                                  interpret=True, tune="auto") is not None
+        assert ops.timing_runs() == runs        # no data: no measuring
+        assert store.read_bytes() == raw        # ...and still no write
+        # the first new write (a fresh tune) replaces the stale file
+        _tune(at)
+        fresh = json.loads(store.read_text())
+        assert fresh["version"] == autotune.PLAN_STORE_VERSION
+        assert fresh["plans"]                   # re-measured, re-populated
+
+    def test_streaming_record_roundtrips(self, store):
+        """v3 records serialize StreamPlan: a searched streaming plan
+        must round-trip (chunk_m intact, n_chunks recomputed) under a
+        device-budget-keyed lookup, and the in-core record for the same
+        tensor must stay distinct."""
+        from repro.core import search
+        at = _tensor()
+        plan, _ = search.search_plan(at, RANK, backend="pallas",
+                                     interpret=True, device_bytes=1,
+                                     budget_runs=2, seed=0)
+        assert plan.streaming is not None
+        hit = autotune.lookup(at.meta, RANK, backend="pallas",
+                              device_bytes=1)
+        assert hit is not None and hit.streaming == plan.streaming
+        assert hit.modes == plan.modes
+        # the in-core key (device_bytes=None) is a different record
+        assert autotune.lookup(at.meta, RANK, backend="pallas") is None
+
     def test_malformed_entry_is_a_miss(self, store):
         at = _tensor()
         _tune(at)

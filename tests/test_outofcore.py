@@ -315,13 +315,23 @@ class TestStreamPlan:
         assert all(m.traversal is heuristics.Traversal.ORIENTED_CARRY
                    for m in plan.modes)
 
-    def test_streaming_rejects_mesh_and_tune(self):
+    def test_streaming_rejects_mesh(self):
         at = _tensor_and_meta()
         mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("x",))
         with pytest.raises(ValueError, match="mesh"):
             plan_mod.make_plan(at.meta, 4, device_bytes=1, mesh=mesh)
-        with pytest.raises(ValueError, match="autotuned"):
-            plan_mod.make_plan(at.meta, 4, device_bytes=1, tune="auto")
+
+    def test_streaming_tune_no_longer_raises(self, tmp_path, monkeypatch):
+        # The PR-7 streaming+tune raise is lifted: a store miss with no
+        # tensor data falls back to the STATIC streaming plan (same
+        # "auto" semantics as in-core), zero timing runs.
+        monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "p.json"))
+        at = _tensor_and_meta()
+        runs = ops.timing_runs()
+        plan = plan_mod.make_plan(at.meta, 4, device_bytes=1, tune="auto")
+        assert plan.streaming is not None
+        assert ops.timing_runs() == runs
+        assert plan == plan_mod.make_plan(at.meta, 4, device_bytes=1)
 
     def test_build_views_yields_host_streams(self):
         at = _tensor_and_meta()
